@@ -1,0 +1,42 @@
+"""Paper §III evaluation-setup table: baseline bespoke MLP circuits
+(topology, multipliers, simulated area/power, accuracy) for the four UCI
+classifiers — the quantities [1]'s table provides and against which Fig. 1/2
+normalize."""
+from __future__ import annotations
+
+import time
+
+from repro.configs.printed_mlp import PRINTED_MLPS
+from repro.core import minimize as MZ
+
+
+def run():
+    out = {}
+    for name, cfg in PRINTED_MLPS.items():
+        b = MZ.baseline(cfg)
+        out[name] = {
+            "topology": "-".join(map(str, cfg.layer_dims)),
+            "accuracy": round(b.accuracy, 4),
+            "area_cm2": round(b.area_mm2 / 100, 2),
+            "power_mw": round(b.power_mw, 1),
+            "multipliers": b.n_multipliers,
+        }
+    return out
+
+
+def main(fast: bool = False):
+    t0 = time.time()
+    res = run()
+    print("area_table (un-minimized 8-bit bespoke baselines, simulated EGT)")
+    print(f"{'dataset':12s} {'topology':>10s} {'acc':>6s} {'cm2':>8s} "
+          f"{'mW':>8s} {'mults':>6s}")
+    for name, r in res.items():
+        print(f"{name:12s} {r['topology']:>10s} {r['accuracy']:6.3f} "
+              f"{r['area_cm2']:8.2f} {r['power_mw']:8.1f} "
+              f"{r['multipliers']:6d}")
+    print(f"[{time.time()-t0:.0f}s]")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""§Dry-run memory table: per-chip argument/temp/alias bytes for every
+compiled cell (both meshes), with a 16 GB HBM fit verdict on the
+weight-resident portion (args − aliased-state)."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+HBM = 16 * 2 ** 30
+
+
+def main(fast: bool = False):
+    rows = []
+    for f in sorted(glob.glob(str(ART / "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok" or "memory" not in r:
+            continue
+        name = Path(f).stem
+        m = r["memory"]
+        rows.append((name, m["argument_bytes"], m["temp_bytes"],
+                     m["alias_bytes"]))
+    print("dryrun_memory_table (per chip; temp is an XLA:CPU upper bound)")
+    print(f"{'cell':58s} {'args GiB':>9s} {'temp GiB':>9s} {'alias GiB':>10s} "
+          f"{'resident<=16G':>13s}")
+    fit = nofit = 0
+    for name, a, t, al in rows:
+        # donated outputs alias their inputs, so `args` counts the resident
+        # params + persistent state exactly once
+        resident = a
+        ok = resident <= HBM
+        fit += ok
+        nofit += not ok
+        print(f"{name:58s} {a/2**30:9.2f} {t/2**30:9.2f} {al/2**30:10.2f} "
+              f"{'yes' if ok else 'NO':>13s}")
+    print(f"cells: fit={fit} over-budget={nofit} (over-budget cells document "
+          f"their remedy in EXPERIMENTS.md §Dry-run)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

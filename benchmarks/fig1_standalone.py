@@ -1,0 +1,79 @@
+"""Paper Fig. 1: accuracy–area Pareto fronts of the three STANDALONE
+minimization techniques on the four classifiers, normalized to the
+un-minimized 8-bit bespoke baseline (Mubarik MICRO'20).
+
+Paper claims to validate (≤5% absolute accuracy loss):
+  quantization ~5x mean area gain; pruning ~2.8x; clustering ~3.5x
+  (clustering meets the 5% bound only on the wine datasets).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.printed_mlp import PRINTED_MLPS
+from repro.core import minimize as MZ
+from repro.core.pareto import gain_at_loss, pareto_front
+
+
+def run(fast: bool = False) -> Dict:
+    epochs = 60 if fast else 150
+    datasets = ["seeds"] if fast else list(PRINTED_MLPS)
+    out: Dict[str, Dict] = {}
+    for name in datasets:
+        cfg = PRINTED_MLPS[name]
+        base = MZ.baseline(cfg)
+        rows = {}
+        sweeps = {
+            "quantization": MZ.quant_sweep(cfg, range(2, 8), epochs=epochs),
+            "pruning": MZ.prune_sweep(cfg, (0.2, 0.3, 0.4, 0.5, 0.6),
+                                      epochs=epochs),
+            "clustering": MZ.cluster_sweep(cfg, (2, 3, 4, 6, 8),
+                                           epochs=epochs),
+        }
+        for tech, results in sweeps.items():
+            pts = [(r.accuracy, r.area_mm2) for r in results]
+            gain = gain_at_loss(pts, baseline_acc=base.accuracy,
+                                baseline_area=base.area_mm2, max_loss=0.05)
+            rows[tech] = {
+                "points": [(round(a, 4), round(ar, 1)) for a, ar in pts],
+                "gain_at_5pct": round(gain, 2),
+            }
+        out[name] = {
+            "baseline_acc": round(base.accuracy, 4),
+            "baseline_area_mm2": round(base.area_mm2, 1),
+            "techniques": rows,
+        }
+    return out
+
+
+def main(fast: bool = False):
+    t0 = time.time()
+    res = run(fast=fast)
+    print("fig1_standalone (area gains at <=5% accuracy loss, "
+          "normalized to 8-bit bespoke baseline)")
+    print(f"{'dataset':12s} {'base_acc':>8s} {'base_cm2':>9s} "
+          f"{'quant':>6s} {'prune':>6s} {'clust':>6s}")
+    means = {"quantization": [], "pruning": [], "clustering": []}
+    for name, r in res.items():
+        t = r["techniques"]
+        for k in means:
+            means[k].append(t[k]["gain_at_5pct"])
+        print(f"{name:12s} {r['baseline_acc']:8.3f} "
+              f"{r['baseline_area_mm2']/100:9.1f} "
+              f"{t['quantization']['gain_at_5pct']:6.2f} "
+              f"{t['pruning']['gain_at_5pct']:6.2f} "
+              f"{t['clustering']['gain_at_5pct']:6.2f}")
+    print(f"{'MEAN':12s} {'':8s} {'':9s} "
+          + " ".join(f"{np.mean(means[k]):6.2f}"
+                     for k in ("quantization", "pruning", "clustering")))
+    print(f"paper:       quant ~5x | prune ~2.8x | cluster ~3.5x "
+          f"[{time.time()-t0:.0f}s]")
+    return res
+
+
+if __name__ == "__main__":
+    main()

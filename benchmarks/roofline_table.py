@@ -1,0 +1,67 @@
+"""Reads artifacts/dryrun/*.json and prints the §Roofline table:
+three terms per (arch x shape), dominant bottleneck, MODEL_FLOPS ratio, and
+one-line what-would-move-it-down notes."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+NOTES = {
+    ("memory", True): "fp32 score tensors -> flash-attention kernel keeps "
+                      "them in VMEM",
+    ("memory", False): "weight/optimizer traffic -> int8 weights "
+                       "(quant_matmul) / larger microbatch",
+    ("collective", True): "FSDP all-gathers -> overlap with layer compute; "
+                          "TP->data reshard",
+    ("collective", False): "TP all-reduces -> reduce-scatter + local update",
+    ("compute", True): "masked-half attention FLOPs -> causal block skipping",
+    ("compute", False): "remat recompute -> selective checkpoint policy",
+}
+
+
+def load(mesh="single"):
+    rows = []
+    for f in sorted(glob.glob(str(ART / f"*__{mesh}.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+PEAK = 197e12
+
+
+def main(fast: bool = False):
+    rows = load()
+    print("roofline_table (single-pod 16x16, per chip, from compiled dry-run)")
+    print("frac = (MODEL_FLOPS/chips/peak) / t_step  — the roofline-MFU "
+          "fraction")
+    hdr = (f"{'arch':24s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'dominant':>10s} {'useful':>7s} {'frac':>6s}")
+    print(hdr)
+    ok = skipped = err = 0
+    for r in rows:
+        if r["status"] == "skipped":
+            skipped += 1
+            print(f"{r['arch']:24s} {r['shape']:12s} "
+                  f"{'-- skipped: ' + r['reason'][:44]}")
+            continue
+        if r["status"] != "ok" or "roofline" not in r:
+            err += 1
+            print(f"{r['arch']:24s} {r['shape']:12s} -- {r['status']}")
+            continue
+        ok += 1
+        ro = r["roofline"]
+        frac = (r["model_flops"] / r["chips"] / PEAK) / ro["t_step_s"] \
+            if ro["t_step_s"] else 0.0
+        print(f"{r['arch']:24s} {r['shape']:12s} {ro['t_compute_s']:9.3g} "
+              f"{ro['t_memory_s']:9.3g} {ro['t_collective_s']:9.3g} "
+              f"{ro['dominant']:>10s} {r['useful_flops_ratio']:7.2f} "
+              f"{frac:6.3f}")
+    print(f"cells: ok={ok} skipped={skipped} error={err}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

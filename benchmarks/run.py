@@ -1,0 +1,51 @@
+"""Benchmark harness: one function per paper table/figure + framework
+benches. Prints ``name,us_per_call,derived`` CSV summaries at the end.
+
+  fig1_standalone — paper Fig. 1 (standalone technique Pareto fronts)
+  fig2_combined   — paper Fig. 2 (hardware-aware GA, combined techniques)
+  area_table      — paper §III baseline circuit table
+  kernel_bench    — per-kernel derived TPU roofline
+  roofline_table  — §Roofline across all dry-run cells
+
+``python -m benchmarks.run [--fast] [--only NAME]``
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import area_table, dryrun_memory_table, fig1_standalone, \
+    fig2_combined, kernel_bench, roofline_table
+
+BENCHES = [
+    ("area_table", area_table.main),
+    ("fig1_standalone", fig1_standalone.main),
+    ("fig2_combined", fig2_combined.main),
+    ("kernel_bench", kernel_bench.main),
+    ("roofline_table", roofline_table.main),
+    ("dryrun_memory_table", dryrun_memory_table.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    csv = []
+    for name, fn in BENCHES:
+        if args.only and name != args.only:
+            continue
+        print(f"\n=== {name} {'=' * (60 - len(name))}")
+        t0 = time.time()
+        fn(fast=args.fast)
+        us = (time.time() - t0) * 1e6
+        csv.append(f"{name},{us:.0f},see-above")
+    print("\nname,us_per_call,derived")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

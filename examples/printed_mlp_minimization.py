@@ -1,0 +1,9 @@
+"""Full paper reproduction, one dataset: the WhiteWine classifier with the
+hardware-aware GA (paper Fig. 2), smaller budget than the benchmark version.
+
+Run:  PYTHONPATH=src python examples/printed_mlp_minimization.py
+"""
+from benchmarks import fig2_combined
+
+if __name__ == "__main__":
+    fig2_combined.main(fast=True)

@@ -1,0 +1,41 @@
+"""Quickstart: the paper's pipeline end to end in ~a minute.
+
+Trains the Seeds printed-MLP classifier, applies each minimization technique
+standalone, prices every design with the bespoke printed-circuit area model,
+and prints the accuracy/area trade-off against the un-minimized baseline.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs.printed_mlp import SEEDS
+from repro.core import minimize as MZ
+from repro.core.compression_spec import ModelMin
+
+n_layers = len(SEEDS.layer_dims) - 1
+
+print("1. un-minimized 8-bit bespoke baseline (Mubarik MICRO'20)")
+base = MZ.baseline(SEEDS)
+print(f"   acc={base.accuracy:.3f} area={base.area_mm2/100:.1f} cm^2 "
+      f"power={base.power_mw:.1f} mW mults={base.n_multipliers}")
+
+print("2. quantization to 4 bits (QAT)")
+r = MZ.evaluate_spec(SEEDS, ModelMin.uniform(n_layers, bits=4))
+print(f"   acc={r.accuracy:.3f} area={r.area_mm2/100:.1f} cm^2 "
+      f"-> {base.area_mm2/r.area_mm2:.2f}x smaller")
+
+print("3. unstructured pruning to 50% sparsity")
+r = MZ.evaluate_spec(SEEDS, ModelMin.uniform(n_layers, bits=8, sparsity=0.5))
+print(f"   acc={r.accuracy:.3f} area={r.area_mm2/100:.1f} cm^2 "
+      f"-> {base.area_mm2/r.area_mm2:.2f}x smaller")
+
+print("4. per-input weight clustering, k=4 (shared multipliers)")
+r = MZ.evaluate_spec(SEEDS, ModelMin.uniform(n_layers, bits=8, clusters=4))
+print(f"   acc={r.accuracy:.3f} area={r.area_mm2/100:.1f} cm^2 "
+      f"-> {base.area_mm2/r.area_mm2:.2f}x smaller, "
+      f"mults={r.n_multipliers} (vs {base.n_multipliers})")
+
+print("5. all three combined (one GA candidate)")
+r = MZ.evaluate_spec(SEEDS, ModelMin.uniform(n_layers, bits=4, sparsity=0.3,
+                                             clusters=6))
+print(f"   acc={r.accuracy:.3f} area={r.area_mm2/100:.1f} cm^2 "
+      f"-> {base.area_mm2/r.area_mm2:.2f}x smaller")
+print("done. benchmarks/fig2_combined.py runs the full hardware-aware GA.")

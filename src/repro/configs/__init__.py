@@ -1,0 +1,6 @@
+from repro.configs.base import (ArchConfig, LayerSpec, Segment, ShapeConfig,
+                                SHAPES, shape_applicable)
+from repro.configs.registry import ARCHS, ARCH_IDS, get_arch
+
+__all__ = ["ArchConfig", "LayerSpec", "Segment", "ShapeConfig", "SHAPES",
+           "shape_applicable", "ARCHS", "ARCH_IDS", "get_arch"]

@@ -1,0 +1,31 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchConfig
+from repro.configs.nemotron_4_340b import CONFIG as _nemotron
+from repro.configs.qwen3_0_6b import CONFIG as _qwen3
+from repro.configs.gemma_7b import CONFIG as _gemma7b
+from repro.configs.gemma2_2b import CONFIG as _gemma2
+from repro.configs.recurrentgemma_9b import CONFIG as _rgemma
+from repro.configs.whisper_base import CONFIG as _whisper
+from repro.configs.falcon_mamba_7b import CONFIG as _mamba
+from repro.configs.llama32_vision_11b import CONFIG as _llamav
+from repro.configs.deepseek_v2_236b import CONFIG as _dsv2
+from repro.configs.phi35_moe_42b import CONFIG as _phi
+
+ARCHS: Dict[str, ArchConfig] = {
+    c.name: c for c in (
+        _nemotron, _qwen3, _gemma7b, _gemma2, _rgemma,
+        _whisper, _mamba, _llamav, _dsv2, _phi,
+    )
+}
+
+ARCH_IDS = tuple(ARCHS)
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]

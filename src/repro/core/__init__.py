@@ -1,0 +1,5 @@
+"""The paper's primary contribution: hardware-aware automated neural
+minimization — quantization + pruning + weight clustering, priced by the
+target hardware's real cost model and searched jointly with NSGA-II."""
+from repro.core import (clustering, compression_spec, ga, hw_model, minimize,
+                        pareto, pruning, quantization, tpu_cost)  # noqa: F401

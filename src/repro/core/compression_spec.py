@@ -1,0 +1,75 @@
+"""Compression specifications — the genome of the hardware-aware search.
+
+A :class:`LayerMin` is the per-layer minimization choice (quantization bits,
+pruning sparsity, cluster count); a :class:`ModelMin` is one choice per
+compressible layer. The same spec drives:
+
+* the printed-MLP path (`core.minimize`): QAT retraining + bespoke compile +
+  printed-area objective (the paper, faithfully);
+* the LM path (`core.lm_compress` / examples): weight-pytree transforms +
+  TPU roofline objective (`core.tpu_cost`) — the beyond-paper integration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clustering as C
+from repro.core import pruning as P
+from repro.core import quantization as Q
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerMin:
+    bits: Optional[int] = None         # None = full precision
+    sparsity: float = 0.0
+    clusters: Optional[int] = None     # None = no clustering
+
+    def validate(self):
+        assert self.bits is None or 2 <= self.bits <= 8, self.bits
+        assert 0.0 <= self.sparsity <= 0.9, self.sparsity
+        assert self.clusters is None or 2 <= self.clusters <= 64
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelMin:
+    layers: Tuple[LayerMin, ...]
+    input_bits: int = 8
+
+    def validate(self):
+        for l in self.layers:
+            l.validate()
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "input_bits": self.input_bits,
+            "layers": [dataclasses.asdict(l) for l in self.layers]})
+
+    @staticmethod
+    def from_json(s: str) -> "ModelMin":
+        d = json.loads(s)
+        return ModelMin(tuple(LayerMin(**l) for l in d["layers"]),
+                        d["input_bits"])
+
+    @staticmethod
+    def uniform(n_layers: int, *, bits=None, sparsity=0.0, clusters=None,
+                input_bits: int = 8) -> "ModelMin":
+        return ModelMin(tuple(LayerMin(bits, sparsity, clusters)
+                              for _ in range(n_layers)), input_bits)
+
+
+def qat_weight(w: jnp.ndarray, spec: LayerMin, mask=None) -> jnp.ndarray:
+    """QAT forward transform (prune -> cluster -> quantize), all STE.
+    Order matters: the bespoke circuit hardwires quantized shared products of
+    surviving connections, so quantization is the outermost grid snap."""
+    if mask is not None:
+        w = P.apply_mask(w, mask)
+    if spec.clusters is not None and w.ndim == 2:
+        w = C.cluster_ste(w, spec.clusters, per_input=True)
+    if spec.bits is not None:
+        w = Q.fake_quant(w, Q.QuantConfig(bits=spec.bits))
+    return w

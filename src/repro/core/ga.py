@@ -1,0 +1,140 @@
+"""Hardware-aware NSGA-II genetic algorithm (paper Fig. 2).
+
+Genome: one (bits, sparsity, clusters) gene per compressible layer.
+Objectives (both minimized): (1 - accuracy, hardware cost). The hardware
+cost callback is pluggable — printed area (mm^2) for the paper's MLPs,
+roofline seconds (`core.tpu_cost`) for the beyond-paper LM integration;
+"hardware-aware" means the GA sees the real deployment cost, not a proxy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.compression_spec import LayerMin, ModelMin
+from repro.core.pareto import crowding_distance, non_dominated_sort
+
+BITS_CHOICES = (2, 3, 4, 5, 6, 7, 8)
+SPARSITY_CHOICES = (0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7)
+CLUSTER_CHOICES = (None, 2, 3, 4, 6, 8, 12, 16)
+
+
+@dataclasses.dataclass
+class GAConfig:
+    population: int = 16
+    generations: int = 8
+    crossover_prob: float = 0.9
+    mutation_prob: float = 0.25
+    seed: int = 0
+    bits_choices: Sequence = BITS_CHOICES
+    sparsity_choices: Sequence = SPARSITY_CHOICES
+    cluster_choices: Sequence = CLUSTER_CHOICES
+
+
+@dataclasses.dataclass
+class GAResult:
+    population: List[ModelMin]
+    objectives: np.ndarray               # (N, 2) minimized
+    history: List[Dict]                  # per-generation stats
+    evaluations: Dict[str, Tuple[float, float]]  # spec json -> objectives
+
+
+def _random_gene(rng, cfg: GAConfig) -> LayerMin:
+    return LayerMin(bits=rng.choice(cfg.bits_choices),
+                    sparsity=rng.choice(cfg.sparsity_choices),
+                    clusters=rng.choice(cfg.cluster_choices))
+
+
+def _mutate(spec: ModelMin, rng, cfg: GAConfig) -> ModelMin:
+    genes = list(spec.layers)
+    for i, g in enumerate(genes):
+        if rng.random() < cfg.mutation_prob:
+            field = rng.choice(["bits", "sparsity", "clusters"])
+            if field == "bits":
+                genes[i] = dataclasses.replace(g, bits=rng.choice(cfg.bits_choices))
+            elif field == "sparsity":
+                genes[i] = dataclasses.replace(
+                    g, sparsity=rng.choice(cfg.sparsity_choices))
+            else:
+                genes[i] = dataclasses.replace(
+                    g, clusters=rng.choice(cfg.cluster_choices))
+    return ModelMin(tuple(genes), spec.input_bits)
+
+
+def _crossover(a: ModelMin, b: ModelMin, rng) -> ModelMin:
+    genes = tuple(ga if rng.random() < 0.5 else gb
+                  for ga, gb in zip(a.layers, b.layers))
+    return ModelMin(genes, a.input_bits)
+
+
+def _tournament(idx_ranked: List[int], rng) -> int:
+    i, j = rng.sample(range(len(idx_ranked)), 2)
+    return idx_ranked[min(i, j)]
+
+
+def run_nsga2(n_layers: int,
+              evaluate: Callable[[ModelMin], Tuple[float, float]],
+              cfg: GAConfig = GAConfig(),
+              seed_specs: Optional[List[ModelMin]] = None) -> GAResult:
+    """evaluate(spec) -> (obj1, obj2), both minimized. Deterministic for a
+    fixed GAConfig.seed. Memoizes repeated specs."""
+    rng = random.Random(cfg.seed)
+    cache: Dict[str, Tuple[float, float]] = {}
+
+    def fit(spec: ModelMin) -> Tuple[float, float]:
+        key = spec.to_json()
+        if key not in cache:
+            cache[key] = tuple(map(float, evaluate(spec)))
+        return cache[key]
+
+    pop: List[ModelMin] = list(seed_specs or [])
+    while len(pop) < cfg.population:
+        pop.append(ModelMin(tuple(_random_gene(rng, cfg)
+                                  for _ in range(n_layers))))
+    history = []
+
+    for gen in range(cfg.generations):
+        objs = np.array([fit(s) for s in pop])
+        fronts = non_dominated_sort(objs)
+        # rank ordering with crowding tiebreak
+        ranked: List[int] = []
+        for f in fronts:
+            if len(f) == 0:
+                continue
+            cd = crowding_distance(objs[f])
+            ranked.extend([int(i) for i in f[np.argsort(-cd)]])
+        history.append({
+            "generation": gen,
+            "best_acc": float(1.0 - objs[:, 0].min()),
+            "min_cost": float(objs[:, 1].min()),
+            "front_size": int(len(fronts[0])),
+        })
+        # offspring
+        children: List[ModelMin] = []
+        while len(children) < cfg.population:
+            pa, pb = pop[_tournament(ranked, rng)], pop[_tournament(ranked, rng)]
+            child = _crossover(pa, pb, rng) if rng.random() < cfg.crossover_prob else pa
+            children.append(_mutate(child, rng, cfg))
+        # mu + lambda environmental selection
+        union = pop + children
+        uobjs = np.array([fit(s) for s in union])
+        ufronts = non_dominated_sort(uobjs)
+        new_pop: List[ModelMin] = []
+        for f in ufronts:
+            if len(new_pop) + len(f) <= cfg.population:
+                new_pop.extend(union[int(i)] for i in f)
+            else:
+                cd = crowding_distance(uobjs[f])
+                order = f[np.argsort(-cd)]
+                for i in order:
+                    if len(new_pop) >= cfg.population:
+                        break
+                    new_pop.append(union[int(i)])
+                break
+        pop = new_pop
+
+    objs = np.array([fit(s) for s in pop])
+    return GAResult(pop, objs, history, cache)

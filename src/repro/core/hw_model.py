@@ -1,0 +1,169 @@
+"""Analytic bespoke printed-circuit area/power model (simulated EGT flow).
+
+The paper prices designs with Synopsys DC + PrimeTime + the EGT
+(Electrolyte-Gated Transistor) library. Those tools are unavailable here, so
+this module implements the published *structure* of bespoke-MLP cost
+analytically (Mubarik MICRO'20; Armeniakos DATE'22):
+
+* a bespoke constant-coefficient multiplier is a shift-add network whose size
+  is (#non-zero CSD digits of the coefficient - 1) adders at (input_bits +
+  weight_bits) width — a zero coefficient is free (no multiplier printed),
+  a power-of-two coefficient is a wire shift;
+* each neuron sums its non-zero products through an adder tree: (operands-1)
+  adders at accumulator width; pruning removes operands, shrinking the tree;
+* per-input weight clustering shares the product x_i*c across fan-out: the
+  row's multiplier count collapses to its #distinct non-zero clusters
+  (adder trees are unchanged — sharing saves multipliers, not sums);
+* ReLU = comparator+mux, argmax = comparator tree.
+
+Unit calibration: EGT full-adder equivalents. AREA_FA/POWER_FA are set so the
+un-minimized 8-bit bespoke MLPs land in the tens-of-cm^2 / ~100 mW range
+reported by MICRO'20. Absolute numbers are approximate (documented DESIGN.md
+§4); the paper's *relative* claims (5x/2.8x/3.5x/8x) are what EXPERIMENTS.md
+validates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# EGT-scale constants, calibrated so (a) un-minimized 8-bit bespoke MLPs land
+# at the tens-of-cm^2 / tens-of-mW magnitudes of MICRO'20 and (b) the
+# multiplier/adder area split matches bespoke synthesis (multipliers ~3/4 of
+# neuron area -- Armeniakos DATE'22 Fig.3): see EXPERIMENTS.md §Calibration.
+AREA_FA_MM2 = 0.60          # printed 1-bit full adder, mm^2
+POWER_FA_MW = 0.004         # mW per full-adder equivalent (EGT, ~few Hz duty)
+RELU_FA_EQ = 2.0            # comparator+mux per output bit, FA equivalents
+ARGMAX_FA_EQ = 1.2          # comparator per bit, FA equivalents
+MULT_ROUTING_FACTOR = 2.0   # partial-product generation + shift routing
+# overhead per CSD-digit adder: bespoke multipliers dominate printed neuron
+# area (~75-85%, Armeniakos DATE'22) -- this factor sets that split
+
+
+def csd_nonzero_digits(c: int) -> int:
+    """Number of non-zero digits in the canonical signed-digit form of |c|.
+    This is the count of shift-add/sub terms a bespoke constant multiplier
+    needs (Avizienis recoding)."""
+    c = abs(int(c))
+    count = 0
+    while c:
+        if c & 1:
+            count += 1
+            # CSD: runs of 1s become +/- pair -> round to nearest multiple of 4
+            c = c + 1 if (c & 3) == 3 else c - 1
+        c >>= 1
+    return count
+
+
+def _csd_vec(q: np.ndarray) -> np.ndarray:
+    return np.vectorize(csd_nonzero_digits, otypes=[np.int64])(q)
+
+
+@dataclasses.dataclass
+class LayerCost:
+    n_multipliers: int
+    mult_fa: float
+    adder_fa: float
+    act_fa: float
+
+    @property
+    def total_fa(self) -> float:
+        return self.mult_fa + self.adder_fa + self.act_fa
+
+
+@dataclasses.dataclass
+class CircuitCost:
+    layers: List[LayerCost]
+    argmax_fa: float
+
+    @property
+    def total_fa(self) -> float:
+        return sum(l.total_fa for l in self.layers) + self.argmax_fa
+
+    @property
+    def area_mm2(self) -> float:
+        return self.total_fa * AREA_FA_MM2
+
+    @property
+    def power_mw(self) -> float:
+        return self.total_fa * POWER_FA_MW
+
+    @property
+    def n_multipliers(self) -> int:
+        return sum(l.n_multipliers for l in self.layers)
+
+
+def layer_cost(q: np.ndarray, *, w_bits: int, in_bits: int,
+               cluster_idx: Optional[np.ndarray] = None,
+               cluster_codebook_q: Optional[np.ndarray] = None,
+               relu: bool = True) -> LayerCost:
+    """Cost of one bespoke dense layer.
+
+    q: integer weight matrix (d_in, d_out) on the w_bits grid (0 = pruned).
+    cluster_idx/codebook_q: per-input clustering (idx (d_in,d_out),
+    integer codebooks (d_in, k)) — multipliers are shared within a row.
+    """
+    q = np.asarray(q, np.int64)
+    d_in, d_out = q.shape
+    prod_width = in_bits + w_bits
+
+    # ---- multipliers -------------------------------------------------------
+    # each non-zero CSD digit costs one shifted add/sub at product width
+    # (the first partial product's routing/shift network included -- a
+    # power-of-two coefficient is wiring, not free)
+    if cluster_idx is not None:
+        mult_fa = 0.0
+        n_mult = 0
+        cb = np.asarray(cluster_codebook_q, np.int64)
+        for i in range(d_in):
+            used = np.unique(cluster_idx[i][np.abs(q[i]) > 0])
+            coeffs = cb[i, used]
+            coeffs = coeffs[np.abs(coeffs) > 0]
+            n_mult += len(coeffs)
+            nnz = _csd_vec(coeffs)
+            mult_fa += float(np.sum(nnz) * prod_width) * MULT_ROUTING_FACTOR
+    else:
+        nz = q[np.abs(q) > 0]
+        n_mult = int(nz.size)
+        nnz = _csd_vec(nz)
+        mult_fa = float(np.sum(nnz) * prod_width) * MULT_ROUTING_FACTOR
+
+    # ---- adder trees (per output neuron; sharing does not shrink sums).
+    # Tree adders are dominated by the narrow lower levels: width ~ product
+    # width (the few wide top-level adders are amortized).
+    operands = (np.abs(q) > 0).sum(axis=0)                 # (d_out,)
+    adder_fa = 0.0
+    for m in operands:
+        adder_fa += (max(m - 1, 0) + 1) * prod_width        # tree + bias add
+
+    # ---- activation ---------------------------------------------------------
+    acc_w = prod_width + math.ceil(math.log2(max(int(operands.max(initial=1)), 2)))
+    act_fa = d_out * RELU_FA_EQ * acc_w if relu else 0.0
+
+    return LayerCost(n_multipliers=n_mult, mult_fa=mult_fa,
+                     adder_fa=adder_fa, act_fa=act_fa)
+
+
+def mlp_cost(q_layers: Sequence[np.ndarray], *, w_bits, in_bits: int = 8,
+             clusters: Optional[Sequence[Optional[Tuple[np.ndarray, np.ndarray]]]] = None
+             ) -> CircuitCost:
+    """q_layers: integer weights per layer (d_in, d_out). w_bits: int or
+    per-layer list. clusters[i]: None or (idx, codebook_q)."""
+    if isinstance(w_bits, int):
+        w_bits = [w_bits] * len(q_layers)
+    costs = []
+    for i, q in enumerate(q_layers):
+        cl = clusters[i] if clusters is not None else None
+        idx, cbq = (cl if cl is not None else (None, None))
+        costs.append(layer_cost(
+            np.asarray(q), w_bits=int(w_bits[i]), in_bits=in_bits,
+            cluster_idx=idx, cluster_codebook_q=cbq,
+            relu=(i < len(q_layers) - 1)))
+    # argmax over the final layer outputs
+    d_out = np.asarray(q_layers[-1]).shape[1]
+    acc_w = in_bits + int(w_bits[-1]) + 4
+    argmax_fa = (d_out - 1) * ARGMAX_FA_EQ * acc_w
+    return CircuitCost(layers=costs, argmax_fa=argmax_fa)

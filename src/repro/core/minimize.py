@@ -1,0 +1,240 @@
+"""Printed-MLP minimization pipeline (the paper, end to end).
+
+Flow per candidate spec (bits/sparsity/clusters per layer):
+
+  FP32 pretrain (cached per dataset)
+    -> magnitude masks from pretrained weights (fixed during finetune)
+    -> QAT finetune with STE prune/cluster/quant forward   [paper's QKeras QAT]
+    -> bespoke "compile": integer weights + shared-product codebooks
+    -> test accuracy of the compiled arithmetic + printed area (hw_model)
+
+The standalone sweeps reproduce Fig. 1; `core.ga` drives the combined search
+of Fig. 2 through `evaluate_spec`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.printed_mlp import PrintedMLPConfig
+from repro.core import clustering as C
+from repro.core import hw_model as HW
+from repro.core import pruning as P
+from repro.core import quantization as Q
+from repro.core.compression_spec import LayerMin, ModelMin
+from repro.data.uci import dataset_for
+from repro.nn import mlp as M
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+
+def _adam_update(g, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * jnp.square(g)
+    mh = m / (1 - b1 ** t)
+    vh = v / (1 - b2 ** t)
+    return -lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+def _loss(params, x, y, w_transform):
+    p2 = {"layers": tuple(
+        {"w": w_transform(i, l["w"]), "b": l["b"]}
+        for i, l in enumerate(params["layers"]))}
+    logits = M.mlp_forward(p2, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], 1))
+
+
+def _train(params, x, y, *, epochs: int, lr: float, w_transform):
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    m0 = [jnp.zeros_like(l) for l in flat]
+
+    def epoch(carry, t):
+        flat, m, v = carry
+        params = jax.tree_util.tree_unflatten(treedef, flat)
+        g = jax.grad(_loss)(params, x, y, w_transform)
+        gflat = jax.tree_util.tree_leaves(g)
+        upd = [_adam_update(gi, mi, vi, t + 1, lr)
+               for gi, mi, vi in zip(gflat, m, v)]
+        flat = [f + u[0] for f, u in zip(flat, upd)]
+        return (flat, [u[1] for u in upd], [u[2] for u in upd]), None
+
+    (flat, _, _), _ = jax.lax.scan(
+        epoch, (flat, m0, list(m0)), jnp.arange(epochs, dtype=jnp.float32))
+    return jax.tree_util.tree_unflatten(treedef, flat)
+
+
+@functools.lru_cache(maxsize=32)
+def pretrain(cfg: PrintedMLPConfig, *, epochs: int = 600, lr: float = 5e-3,
+             seed: int = 0):
+    """FP32 baseline training (cached). Returns (params, (data tuple))."""
+    xtr, ytr, xte, yte = dataset_for(cfg, seed=seed)
+    params = M.mlp_init(jax.random.PRNGKey(seed), cfg.layer_dims)
+    fit = jax.jit(functools.partial(
+        _train, epochs=epochs, lr=lr, w_transform=lambda i, w: w))
+    params = fit(params, jnp.asarray(xtr), jnp.asarray(ytr))
+    return params, (xtr, ytr, xte, yte)
+
+
+# ---------------------------------------------------------------------------
+# QAT finetune under a spec
+# ---------------------------------------------------------------------------
+
+
+def _qat_transform(spec: ModelMin, masks):
+    def t(i, w):
+        lm = spec.layers[i]
+        if masks[i] is not None:
+            w = P.apply_mask(w, masks[i])
+        if lm.clusters is not None:
+            w = C.cluster_ste(w, lm.clusters, per_input=True)
+        if lm.bits is not None:
+            w = Q.fake_quant(w, Q.QuantConfig(bits=lm.bits))
+        return w
+    return t
+
+
+def qat_finetune(params0, spec: ModelMin, masks, x, y, *, epochs: int = 150,
+                 lr: float = 2e-3):
+    fit = jax.jit(functools.partial(
+        _train, epochs=epochs, lr=lr, w_transform=_qat_transform(spec, masks)))
+    return fit(params0, jnp.asarray(x), jnp.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# bespoke compile + evaluation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CompiledMLP:
+    q_layers: List[np.ndarray]           # integer weights (0 = pruned)
+    scales: List[float]
+    biases: List[np.ndarray]
+    clusters: List[Optional[Tuple[np.ndarray, np.ndarray]]]  # (idx, int codebook)
+    w_bits: List[int]
+    input_bits: int
+
+    def dense_weights(self) -> List[np.ndarray]:
+        out = []
+        for q, s, cl in zip(self.q_layers, self.scales, self.clusters):
+            out.append(q.astype(np.float32) * s)
+        return out
+
+
+def compile_bespoke(params, spec: ModelMin, masks) -> CompiledMLP:
+    q_layers, scales, biases, clusters, w_bits = [], [], [], [], []
+    for i, layer in enumerate(params["layers"]):
+        lm = spec.layers[i]
+        bits = lm.bits if lm.bits is not None else 8
+        w = np.asarray(layer["w"], np.float32)
+        if masks[i] is not None:
+            w = w * np.asarray(masks[i], np.float32)
+        if lm.clusters is not None:
+            cb, idx = C.cluster_per_input(jnp.asarray(w), lm.clusters)
+            cb, idx = np.asarray(cb), np.asarray(idx)
+            w_rec = np.take_along_axis(cb, idx, axis=1)
+            # snap codebooks to the fixed-point grid
+            qmax = 2 ** (bits - 1) - 1
+            s = max(np.abs(w_rec).max(), 1e-8) / qmax
+            cb_q = np.clip(np.round(cb / s), -qmax, qmax).astype(np.int64)
+            q = np.take_along_axis(cb_q, idx, axis=1)
+            # re-apply pruning zeros (cluster may absorb them)
+            if masks[i] is not None:
+                q = q * np.asarray(masks[i], np.int64)
+            clusters.append((idx, cb_q))
+        else:
+            qj, sj = Q.quantize_int(jnp.asarray(w), Q.QuantConfig(bits=bits))
+            q, s = np.asarray(qj, np.int64), float(np.asarray(sj))
+            clusters.append(None)
+        q_layers.append(q)
+        scales.append(float(s))
+        biases.append(np.asarray(layer["b"], np.float32))
+        w_bits.append(bits)
+    return CompiledMLP(q_layers, scales, biases, clusters, w_bits,
+                       spec.input_bits)
+
+
+def compiled_accuracy(c: CompiledMLP, x: np.ndarray, y: np.ndarray) -> float:
+    """Accuracy of the exact bespoke arithmetic: quantized inputs x quantized
+    integer weights (float emulation is exact for these ranges)."""
+    levels = 2 ** c.input_bits - 1
+    h = np.round(np.asarray(x, np.float32) * levels) / levels
+    ws = c.dense_weights()
+    for i, (w, b) in enumerate(zip(ws, c.biases)):
+        h = h @ w + b
+        if i < len(ws) - 1:
+            h = np.maximum(h, 0.0)
+    return float(np.mean(np.argmax(h, axis=1) == y))
+
+
+def compiled_cost(c: CompiledMLP) -> HW.CircuitCost:
+    return HW.mlp_cost(c.q_layers, w_bits=c.w_bits, in_bits=c.input_bits,
+                       clusters=c.clusters)
+
+
+# ---------------------------------------------------------------------------
+# spec evaluation + sweeps (Fig. 1)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EvalResult:
+    spec: ModelMin
+    accuracy: float
+    area_mm2: float
+    power_mw: float
+    n_multipliers: int
+
+
+def make_masks(params0, spec: ModelMin):
+    return [P.magnitude_mask(l["w"], lm.sparsity) if lm.sparsity > 0 else None
+            for l, lm in zip(params0["layers"], spec.layers)]
+
+
+def evaluate_spec(cfg: PrintedMLPConfig, spec: ModelMin, *,
+                  epochs: int = 150, seed: int = 0) -> EvalResult:
+    params0, (xtr, ytr, xte, yte) = pretrain(cfg, seed=seed)
+    masks = make_masks(params0, spec)
+    params = qat_finetune(params0, spec, masks, xtr, ytr, epochs=epochs)
+    compiled = compile_bespoke(params, spec, masks)
+    acc = compiled_accuracy(compiled, xte, yte)
+    cost = compiled_cost(compiled)
+    return EvalResult(spec, acc, cost.area_mm2, cost.power_mw,
+                      cost.n_multipliers)
+
+
+def baseline(cfg: PrintedMLPConfig, *, seed: int = 0) -> EvalResult:
+    """MICRO'20 un-minimized bespoke MLP: dense 8-bit fixed point."""
+    n = len(cfg.layer_dims) - 1
+    return evaluate_spec(cfg, ModelMin.uniform(n, bits=8), epochs=60,
+                         seed=seed)
+
+
+def quant_sweep(cfg, bits_range=range(2, 8), *, epochs=150, seed=0):
+    n = len(cfg.layer_dims) - 1
+    return [evaluate_spec(cfg, ModelMin.uniform(n, bits=b), epochs=epochs,
+                          seed=seed) for b in bits_range]
+
+
+def prune_sweep(cfg, sparsities=(0.2, 0.3, 0.4, 0.5, 0.6), *, epochs=150,
+                seed=0):
+    n = len(cfg.layer_dims) - 1
+    return [evaluate_spec(
+        cfg, ModelMin.uniform(n, bits=8, sparsity=s), epochs=epochs,
+        seed=seed) for s in sparsities]
+
+
+def cluster_sweep(cfg, ks=(2, 3, 4, 6, 8), *, epochs=150, seed=0):
+    n = len(cfg.layer_dims) - 1
+    return [evaluate_spec(
+        cfg, ModelMin.uniform(n, bits=8, clusters=k), epochs=epochs,
+        seed=seed) for k in ks]

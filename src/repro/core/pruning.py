@@ -1,0 +1,93 @@
+"""Pruning (paper §II-B).
+
+Unstructured magnitude pruning is the paper's hardware winner: bespoke
+circuits delete the multiplier of every zero weight outright and shrink the
+neuron's adder tree. We implement:
+
+* unstructured per-layer magnitude masks at a target sparsity,
+* global (cross-layer) magnitude pruning,
+* structured neuron (column) pruning for comparison,
+* a cubic sparsity ramp schedule for prune-during-training,
+* mask application with STE-style gradient masking (pruned weights get no
+  gradient so fine-tuning does not resurrect them).
+
+TPU adaptation (DESIGN.md §3): block-structured masks (``block_mask``) are
+the MXU-meaningful unit — consumed by ``kernels/block_sparse_matmul``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def magnitude_mask(w: jnp.ndarray, sparsity: float) -> jnp.ndarray:
+    """Keep the largest-|w| (1-sparsity) fraction. Returns bool mask."""
+    assert 0.0 <= sparsity < 1.0
+    if sparsity == 0.0:
+        return jnp.ones_like(w, dtype=bool)
+    k = int(round(w.size * (1.0 - sparsity)))
+    k = max(k, 1)
+    thresh = jnp.sort(jnp.abs(w).reshape(-1))[-k]
+    return jnp.abs(w) >= thresh
+
+
+def global_magnitude_masks(params, sparsity: float, *, min_size: int = 16):
+    """One global threshold across all >=min_size leaves (Deep Compression
+    style). Small leaves (biases, norms) are never pruned."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    big = [jnp.abs(l).reshape(-1) for l in leaves
+           if l.size >= min_size and l.ndim >= 2]
+    allw = jnp.sort(jnp.concatenate(big))
+    k = max(int(round(allw.size * (1.0 - sparsity))), 1)
+    thresh = allw[-k]
+    masks = [jnp.abs(l) >= thresh if (l.size >= min_size and l.ndim >= 2)
+             else jnp.ones_like(l, dtype=bool) for l in leaves]
+    return jax.tree_util.tree_unflatten(treedef, masks)
+
+
+def neuron_mask(w: jnp.ndarray, sparsity: float) -> jnp.ndarray:
+    """Structured: prune whole output columns by L2 norm."""
+    norms = jnp.linalg.norm(w, axis=0)
+    k = max(int(round(norms.size * (1.0 - sparsity))), 1)
+    thresh = jnp.sort(norms)[-k]
+    return jnp.broadcast_to(norms >= thresh, w.shape)
+
+
+def block_mask(w: jnp.ndarray, sparsity: float, block=(16, 16)) -> jnp.ndarray:
+    """TPU-structured: prune (bk, bn) tiles by Frobenius norm. w must be 2D
+    with dims divisible by the block (callers pad)."""
+    K, N = w.shape
+    bk, bn = block
+    assert K % bk == 0 and N % bn == 0, (w.shape, block)
+    tiles = w.reshape(K // bk, bk, N // bn, bn)
+    norms = jnp.sqrt(jnp.sum(jnp.square(tiles), axis=(1, 3)))   # (K/bk, N/bn)
+    k = max(int(round(norms.size * (1.0 - sparsity))), 1)
+    thresh = jnp.sort(norms.reshape(-1))[-k]
+    keep = norms >= thresh
+    return jnp.repeat(jnp.repeat(keep, bk, axis=0), bn, axis=1)
+
+
+def apply_mask(w: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked weight with masked gradient (pruned entries stay dead)."""
+    return w * mask.astype(w.dtype)
+
+
+def apply_masks(params, masks):
+    return jax.tree_util.tree_map(apply_mask, params, masks)
+
+
+def sparsity_of(masks) -> float:
+    tot = sum(int(m.size) for m in jax.tree_util.tree_leaves(masks))
+    kept = sum(int(jnp.sum(m)) for m in jax.tree_util.tree_leaves(masks))
+    return 1.0 - kept / max(tot, 1)
+
+
+def cubic_schedule(step: int, *, begin: int, end: int, final: float,
+                   initial: float = 0.0) -> float:
+    """Zhu & Gupta (2017) cubic sparsity ramp for prune-during-training."""
+    if step <= begin:
+        return initial
+    if step >= end:
+        return final
+    t = (step - begin) / max(end - begin, 1)
+    return final + (initial - final) * (1.0 - t) ** 3

@@ -1,0 +1,86 @@
+"""Quantization / precision scaling (paper §II-A).
+
+The paper quantizes MLP weights to 2–7 bits with QKeras-style
+quantization-aware (re)training. We implement the same scheme natively:
+
+* symmetric uniform quantizer with power-of-two or per-tensor max scaling
+  (bespoke printed circuits multiply by the *fixed-point coefficient*, so the
+  quantized integer grid is what the hardware sees);
+* straight-through estimator (STE) for QAT — forward uses the quantized
+  weight, backward passes gradients through unchanged;
+* per-tensor and per-channel granularity (per-channel is the TPU-side
+  `quant_matmul` kernel's native layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    bits: int = 8
+    per_channel: bool = False          # scale per output channel (last dim)
+    symmetric: bool = True
+    po2_scale: bool = False            # power-of-two scale (pure shifts in HW)
+
+    def __post_init__(self):
+        assert 1 < self.bits <= 16, self.bits
+
+
+def _scale(w: jnp.ndarray, qc: QuantConfig) -> jnp.ndarray:
+    qmax = 2.0 ** (qc.bits - 1) - 1.0
+    if qc.per_channel and w.ndim >= 2:
+        amax = jnp.max(jnp.abs(w), axis=tuple(range(w.ndim - 1)),
+                       keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(w))
+    amax = jnp.maximum(amax, 1e-8)
+    scale = amax / qmax
+    if qc.po2_scale:
+        scale = 2.0 ** jnp.ceil(jnp.log2(scale))
+    return scale
+
+
+def quantize_int(w: jnp.ndarray, qc: QuantConfig):
+    """-> (q int32 in [-qmax, qmax], scale). w_hat = q * scale."""
+    scale = _scale(w.astype(jnp.float32), qc)
+    qmax = 2.0 ** (qc.bits - 1) - 1.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int32), scale
+
+
+def dequantize(q: jnp.ndarray, scale, dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def fake_quant(w: jnp.ndarray, qc: QuantConfig) -> jnp.ndarray:
+    """Quantize-dequantize with STE: forward snaps to the grid, gradient is
+    identity. This is the QAT forward used during (re)training."""
+    def _fq(w):
+        q, scale = quantize_int(w, qc)
+        return dequantize(q, scale, w.dtype)
+    # forward: fq(w); backward: identity (the correction term carries no grad)
+    return w + (_fq(jax.lax.stop_gradient(w)) - jax.lax.stop_gradient(w))
+
+
+def fake_quant_tree(params, bits_tree):
+    """Apply fake-quant leaf-wise. ``bits_tree``: pytree-prefix of ints or
+    None (None = leave leaf in full precision)."""
+    def fq(w, bits):
+        if bits is None or w.ndim == 0:
+            return w
+        return fake_quant(w, QuantConfig(bits=int(bits)))
+    return jax.tree_util.tree_map(fq, params, bits_tree,
+                                  is_leaf=lambda x: x is None)
+
+
+def quant_error(w: jnp.ndarray, qc: QuantConfig) -> float:
+    """Relative L2 quantization error — used by the GA's cheap fitness proxy."""
+    q, s = quantize_int(w, qc)
+    err = jnp.linalg.norm(w - dequantize(q, s)) / \
+        jnp.maximum(jnp.linalg.norm(w), 1e-9)
+    return float(err)

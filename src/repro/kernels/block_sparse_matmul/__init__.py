@@ -1,0 +1,4 @@
+from repro.kernels.block_sparse_matmul.ops import (block_sparse_matmul,
+                                                   block_sparse_matmul_ref)
+
+__all__ = ["block_sparse_matmul", "block_sparse_matmul_ref"]

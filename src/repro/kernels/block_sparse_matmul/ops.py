@@ -1,0 +1,24 @@
+"""jit'd wrapper (shapes must already be block multiples — pruning masks are
+built on padded weights by `repro.core.pruning.block_mask`)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.block_sparse_matmul.kernel import block_sparse_matmul_pallas
+from repro.kernels.block_sparse_matmul.ref import block_sparse_matmul_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def block_sparse_matmul(x, w, block_mask, *, block_m=128, block_n=128,
+                        block_k=128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return block_sparse_matmul_pallas(
+        x, w, block_mask, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret)
+
+
+__all__ = ["block_sparse_matmul", "block_sparse_matmul_ref"]

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for block_sparse_matmul."""
+import jax.numpy as jnp
+
+
+def block_sparse_matmul_ref(x, w, block_mask, *, block_k: int, block_n: int):
+    mask = jnp.repeat(jnp.repeat(block_mask.astype(w.dtype), block_k, 0),
+                      block_n, 1)
+    return (x.astype(jnp.float32) @ (w * mask).astype(jnp.float32)
+            ).astype(x.dtype)

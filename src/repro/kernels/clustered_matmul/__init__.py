@@ -1,0 +1,4 @@
+from repro.kernels.clustered_matmul.ops import clustered_matmul
+from repro.kernels.clustered_matmul.ref import clustered_matmul_ref
+
+__all__ = ["clustered_matmul", "clustered_matmul_ref"]

@@ -1,0 +1,38 @@
+"""jit'd wrapper with padding + interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.clustered_matmul.kernel import clustered_matmul_pallas
+from repro.kernels.clustered_matmul.ref import clustered_matmul_ref
+
+
+def _pad_to(a, mult, axis, value=0):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def clustered_matmul(x, idx, codebook, *, block_m=128, block_n=128,
+                     block_k=128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    M, N = x.shape[0], idx.shape[1]
+    xp = _pad_to(_pad_to(x, block_m, 0), block_k, 1)
+    # padded K rows index cluster 0 of a zero codebook row -> contribute 0
+    ip = _pad_to(_pad_to(idx, block_k, 0), block_n, 1)
+    cp = _pad_to(codebook, block_k, 0)
+    y = clustered_matmul_pallas(xp, ip, cp, block_m=block_m, block_n=block_n,
+                                block_k=block_k, interpret=interpret)
+    return y[:M, :N]
+
+
+__all__ = ["clustered_matmul", "clustered_matmul_ref"]

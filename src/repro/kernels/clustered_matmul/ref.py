@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for clustered_matmul."""
+import jax.numpy as jnp
+
+
+def clustered_matmul_ref(x, idx, codebook):
+    w = jnp.take_along_axis(codebook, idx.astype(jnp.int32), axis=1)
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,49 @@
+"""jit'd wrapper: GQA head folding + padding + interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128, interpret: bool | None = None):
+    """q: (B, T, H, hd); k/v: (B, S, KV, hd) with H % KV == 0.
+    Returns (B, T, H, hd)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    # fold batch+heads; broadcast kv over the group
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    kf = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, KV, G, S, hd)).reshape(B * H, S, hd)
+    vf = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, KV, G, S, hd)).reshape(B * H, S, hd)
+    bq = min(block_q, T) if T % min(block_q, T) == 0 else block_q
+    bk = min(block_k, S) if S % min(block_k, S) == 0 else block_k
+    padT = (-T) % bq
+    padS = (-S) % bk
+    if padT:
+        qf = jnp.pad(qf, ((0, 0), (0, padT), (0, 0)))
+    if padS:
+        kf = jnp.pad(kf, ((0, 0), (0, padS), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, padS), (0, 0)))
+        # padded keys sit at positions >= S: causal masking hides them for
+        # q_pos < S; guard the non-causal case via window-free mask in kernel
+    o = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                               softcap=softcap, block_q=bq, block_k=bk,
+                               interpret=interpret)
+    o = o[:, :T].reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+    return o
+
+
+__all__ = ["flash_attention", "flash_attention_ref"]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash_attention."""
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: (BH, T, d); k/v: (BH, S, d)."""
+    T, S = q.shape[1], k.shape[1]
+    d = q.shape[-1]
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = jnp.arange(T)[:, None]
+    kp = jnp.arange(S)[None, :]
+    ok = jnp.ones((T, S), bool)
+    if causal:
+        ok &= kp <= qp
+    if window:
+        ok &= kp > qp - window
+    s = jnp.where(ok[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(ok[None], p, 0.0)
+    return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

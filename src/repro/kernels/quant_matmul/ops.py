@@ -1,0 +1,39 @@
+"""jit'd wrapper: padding to block multiples + CPU interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+
+def _pad_to(a, mult, axis):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def quant_matmul(x, w_q, scales, *, block_m=128, block_n=128, block_k=128,
+                 interpret: bool | None = None):
+    """y = x @ dequant(w_q, scales). Shapes padded to block multiples; the
+    kernel runs interpret=True off-TPU (correctness path on this container)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    M, N = x.shape[0], w_q.shape[1]
+    xp = _pad_to(_pad_to(x, block_m, 0), block_k, 1)
+    wp = _pad_to(_pad_to(w_q, block_k, 0), block_n, 1)
+    sp = _pad_to(scales, block_n, 0)
+    y = quant_matmul_pallas(xp, wp, sp, block_m=block_m, block_n=block_n,
+                            block_k=block_k, interpret=interpret)
+    return y[:M, :N]
+
+
+__all__ = ["quant_matmul", "quant_matmul_ref"]

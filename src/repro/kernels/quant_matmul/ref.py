@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for quant_matmul."""
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x, w_q, scales):
+    w = w_q.astype(jnp.float32) * scales.astype(jnp.float32)[None, :]
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

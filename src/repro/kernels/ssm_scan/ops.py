@@ -1,0 +1,36 @@
+"""jit'd wrapper: pads T to the time-block, d to the channel block."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssm_scan_pallas
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_t",
+                                             "interpret"))
+def ssm_scan(u, dt, B_, C_, A, D, *, block_d=None, block_t=8,
+             interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Bsz, T, d = u.shape
+    block_d = block_d or min(d, 512)
+    padT = (-T) % block_t
+    padD = (-d) % block_d
+    if padT or padD:
+        pt, pd = ((0, 0), (0, padT), (0, padD)), ((0, 0), (0, padT), (0, 0))
+        u = jnp.pad(u, pt)
+        dt = jnp.pad(dt, pt)
+        B_ = jnp.pad(B_, pd)
+        C_ = jnp.pad(C_, pd)
+        A = jnp.pad(A, ((0, padD), (0, 0)))
+        D = jnp.pad(D, ((0, padD),))
+    y = ssm_scan_pallas(u, dt, B_, C_, A, D, block_d=block_d,
+                        block_t=block_t, interpret=interpret)
+    return y[:, :T, :d]
+
+
+__all__ = ["ssm_scan", "ssm_scan_ref"]

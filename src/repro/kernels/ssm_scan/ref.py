@@ -1,0 +1,7 @@
+"""Pure-jnp oracle: the model's own selective scan (repro.nn.ssm)."""
+from repro.nn.ssm import _selective_scan
+
+
+def ssm_scan_ref(u, dt, B_, C_, A, D):
+    y, _ = _selective_scan(u, dt, B_, C_, A, D)
+    return y.astype(u.dtype)

@@ -1,0 +1,58 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Runs the batched engine on synthetic requests (reduced configs on CPU; the
+full-config multi-pod serve_step is proven by launch/dryrun.py decode cells).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.nn import transformer as T
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].reduced()
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, batch=args.batch, max_len=args.max_len)
+
+    enc_out = None
+    if cfg.encoder is not None:
+        frames = jnp.zeros((args.batch, cfg.encoder.num_frames, cfg.d_model))
+        enc_out = T._encoder_forward(params["encoder"], frames, cfg,
+                                     remat=False)
+    elif cfg.vision is not None:
+        enc_out = jnp.zeros((args.batch, cfg.vision.num_patches, cfg.d_model))
+
+    reqs = [Request(rid=i, prompt=[(7 * i + 3) % cfg.vocab_size,
+                                   (11 * i + 5) % cfg.vocab_size],
+                    max_new_tokens=args.max_new_tokens)
+            for i in range(args.requests)]
+    t0 = time.time()
+    eng.run(reqs, enc_out=enc_out)
+    dt = time.time() - t0
+    print(json.dumps({
+        "arch": cfg.name, "requests": len(reqs),
+        "tokens": eng.stats.tokens_generated,
+        "steps": eng.stats.steps,
+        "tokens_per_s": round(eng.stats.tokens_generated / dt, 1),
+        "sample_output": reqs[0].output,
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+`input_specs` returns abstract model inputs (weak-type-correct, shardable, no
+device allocation); `abstract_state` / `abstract_decode_state` eval_shape the
+train/serve state. The dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist import sharding as SH
+from repro.nn import transformer as T
+from repro.train.optimizer import AdamWConfig
+from repro.train import train_state as TS
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_divisor(mesh: Mesh) -> int:
+    return int(jax.numpy.prod(jnp.asarray(
+        [mesh.shape[a] for a in SH.batch_axes(mesh)])))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract model inputs for the cell (training batch or decode tokens)."""
+    B = shape.global_batch
+    if shape.kind == "decode":
+        specs = {"tokens": _sds((B, 1), jnp.int32)}
+    else:
+        specs = {"tokens": _sds((B, shape.seq_len), jnp.int32)}
+    if cfg.encoder is not None and shape.kind != "decode":
+        specs["frames"] = _sds((B, cfg.encoder.num_frames, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+    if cfg.vision is not None and shape.kind != "decode":
+        specs["patches"] = _sds((B, cfg.vision.num_patches, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+    return specs
+
+
+def input_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    specs = input_specs(cfg, shape)
+    div = 1
+    for a in SH.batch_axes(mesh):
+        div *= mesh.shape[a]
+    baxes = SH.batch_axes(mesh) if shape.global_batch % max(div, 1) == 0 \
+        else ()
+
+    def spec(path, leaf):
+        axes: list = [None] * len(leaf.shape)
+        if baxes:
+            axes[0] = baxes
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree_util.tree_map_with_path(spec, specs)
+
+
+def abstract_train_state(cfg: ArchConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    opt_cfg = AdamWConfig()
+    return jax.eval_shape(lambda k: TS.init_state(k, cfg, opt_cfg), key)
+
+
+def train_state_shardings(cfg: ArchConfig, mesh: Mesh, state_shapes=None):
+    state_shapes = state_shapes if state_shapes is not None \
+        else abstract_train_state(cfg)
+    pspecs = SH.param_specs(state_shapes.params, mesh)
+    pshard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+    mshard = pshard
+    return TS.TrainState(
+        params=pshard,
+        opt=state_shapes.opt._replace(
+            step=NamedSharding(mesh, P()),
+            m=mshard, v=jax.tree_util.tree_map(lambda x: x, mshard)),
+    )
+
+
+def abstract_decode_state(cfg: ArchConfig, shape: ShapeConfig, kv_dtype=None):
+    B = shape.global_batch
+    dtype = jnp.dtype(kv_dtype) if kv_dtype else jnp.dtype(cfg.dtype)
+    return jax.eval_shape(
+        lambda: T.init_decode_state(cfg, B, shape.seq_len, dtype))
+
+
+def decode_state_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                           state_shapes=None):
+    state_shapes = state_shapes if state_shapes is not None \
+        else abstract_decode_state(cfg, shape)
+    div = 1
+    for a in SH.batch_axes(mesh):
+        div *= mesh.shape[a]
+    # batch too small to shard (long_500k B=1): replicate the batch dim
+    ok = shape.global_batch % max(div, 1) == 0
+    specs = SH.cache_specs(state_shapes, mesh, cfg, shard_batch=ok)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_params(cfg: ArchConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: T.init(k, cfg), key)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, params_shapes=None):
+    params_shapes = params_shapes if params_shapes is not None \
+        else abstract_params(cfg)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        SH.param_specs(params_shapes, mesh))

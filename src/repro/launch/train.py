@@ -1,0 +1,101 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Single-host execution of the production train step (the multi-pod dry-run
+proves the same step compiles on the 512-chip mesh). Supports resume,
+periodic async checkpoints, preemption (SIGTERM), microbatching, and the
+paper's compression spec as a first-class flag (--qat-bits / --sparsity /
+--clusters apply the repro.core QAT forward to every matmul weight).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.core import pruning as P
+from repro.core import quantization as Q
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def make_compression(bits=None, sparsity=0.0, clusters=None):
+    """params -> params QAT transform over >=2D weights (paper technique)."""
+    if bits is None and not sparsity and clusters is None:
+        return None
+    from repro.core.clustering import cluster_ste
+
+    def transform(params):
+        def leaf(w):
+            if w.ndim < 2 or w.size < 4096:
+                return w
+            out = w
+            if sparsity:
+                out = P.apply_mask(out, P.magnitude_mask(out, sparsity))
+            if clusters is not None and out.ndim == 2:
+                out = cluster_ste(out, clusters, per_input=False)
+            if bits is not None:
+                out = Q.fake_quant(out, Q.QuantConfig(bits=bits))
+            return out
+        return jax.tree_util.tree_map(leaf, params)
+
+    return transform
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--qat-bits", type=int, default=None)
+    ap.add_argument("--sparsity", type=float, default=0.0)
+    ap.add_argument("--clusters", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.global_batch))
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 20, 1))
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir, microbatch=args.microbatch)
+
+    def extra(step):
+        out = {}
+        if cfg.encoder is not None:
+            out["frames"] = jnp.zeros(
+                (args.global_batch, cfg.encoder.num_frames, cfg.d_model))
+        if cfg.vision is not None:
+            out["patches"] = jnp.zeros(
+                (args.global_batch, cfg.vision.num_patches, cfg.d_model))
+        return out
+
+    trainer = Trainer(cfg, opt, tcfg, pipe, extra_batch=extra)
+    compression = make_compression(args.qat_bits, args.sparsity,
+                                   args.clusters)
+    if compression is not None:
+        from repro.train import train_state as TS
+        trainer.step_fn = jax.jit(TS.make_train_step(
+            cfg, opt, remat=True, microbatch=args.microbatch,
+            compression=compression))
+    trainer.install_signal_handler()
+    out = trainer.run()
+    print(json.dumps({k: v for k, v in out.items() if k != "history"}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Minimal functional neural-net substrate (no flax in container).
+
+Every layer is an ``init_*(key, ...) -> params`` / ``apply(params, x, ...)``
+pair over plain dict pytrees. Parameter leaf names are stable and are used by
+``repro.dist.sharding`` (partition rules) and ``repro.core`` (compression
+specs) — do not rename leaves casually.
+"""
+from repro.nn import layers, attention, moe, ssm, rglru, transformer  # noqa: F401

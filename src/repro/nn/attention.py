@@ -1,0 +1,395 @@
+"""Attention mixers: GQA/MQA (global, sliding-window, cross) and MLA.
+
+Implementation notes
+--------------------
+* GQA grouping is explicit: q heads are reshaped to (KV, G) so the kv tensors
+  never need repeating (saves HBM bytes and keeps the einsum MXU-shaped).
+* Long-sequence prefill uses an online-softmax scan over KV chunks
+  ("flash-in-XLA"): peak memory O(T * chunk) instead of O(T^2). The Pallas
+  `flash_attention` kernel (repro.kernels) is the TPU-native version; the
+  chunked jnp path below is the portable default used by the dry-run.
+* Sliding-window ("local") attention is *banded*: q blocks of size W attend to
+  their own and the previous kv block only -> O(T * 2W) FLOPs, which is what
+  makes recurrentgemma/gemma2 local layers cheap at long context.
+* MLA (DeepSeek-V2) caches the compressed c_kv (kv_lora + rope dims) and uses
+  the *absorbed* formulation at decode so per-token FLOPs scale with
+  kv_lora_rank, not heads * head_dim.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLAConfig
+from repro.nn import layers as L
+
+NEG_INF = -2.0e38
+
+# Measurement hook (repro.launch.dryrun): XLA cost_analysis counts while-loop
+# bodies once, so the chunked-softmax scan under-reports score bytes/FLOPs by
+# ~S/chunk. The dry-run's unrolled cost lowers set CHUNK_OVERRIDE to force
+# the single-einsum path, whose *total* traffic equals the chunked path's.
+CHUNK_OVERRIDE = None
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ArchConfig, dtype, *, bias: bool = False,
+              cross: bool = False):
+    d, H, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": L.dense_init(ks[0], d, H * hd, dtype, out_shape=(H, hd), bias=bias),
+        "wk": L.dense_init(ks[1], d, KV * hd, dtype, out_shape=(KV, hd), bias=bias),
+        "wv": L.dense_init(ks[2], d, KV * hd, dtype, out_shape=(KV, hd), bias=bias),
+        "wo": L.dense_in3_init(ks[3], H, hd, d, dtype, bias=bias),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.norm_init(hd, "rmsnorm")
+        p["k_norm"] = L.norm_init(hd, "rmsnorm")
+    if cross:
+        p["c_wq"] = L.dense_init(ks[4], d, H * hd, dtype, out_shape=(H, hd), bias=bias)
+        p["c_wk"] = L.dense_init(ks[5], d, KV * hd, dtype, out_shape=(KV, hd), bias=bias)
+        p["c_wv"] = L.dense_init(ks[6], d, KV * hd, dtype, out_shape=(KV, hd), bias=bias)
+        p["c_wo"] = L.dense_in3_init(ks[7], H, hd, d, dtype, bias=bias)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# core attend
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores(q, k, scale, dtype=jnp.float32):
+    """q: (B,T,KV,G,hd)  k: (B,S,KV,hd) -> (B,KV,G,T,S)"""
+    return (jnp.einsum("btkgh,bskh->bkgts", q.astype(dtype),
+                       k.astype(dtype),
+                       preferred_element_type=dtype) * dtype(scale))
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int, kv_len=None):
+    """(T,S) additive bias in fp32. q_pos/k_pos: int32 vectors."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_len is not None:
+        ok &= k_pos[None, :] < kv_len
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attend(q, k, v, *, causal: bool, window: int = 0, softcap: float = 0.0,
+           q_offset=0, kv_len=None, chunk: int = 2048, k_positions=None,
+           lowp: bool = False):
+    """General attention. q: (B,T,H,hd); k/v: (B,S,KV,hd). Returns (B,T,H,hd).
+
+    q_offset:    absolute position of q[0] (decode: cache length). May be traced.
+    kv_len:      valid kv prefix length (decode with preallocated cache).
+    k_positions: explicit absolute position per kv slot (ring buffers). Only
+                 supported on the single-chunk path.
+    """
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    vd = v.shape[-1]                    # may differ from hd (MLA)
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    sdt = jnp.bfloat16 if lowp else jnp.float32
+    if CHUNK_OVERRIDE is not None:
+        chunk = CHUNK_OVERRIDE
+    qg = q.reshape(B, T, KV, G, hd)
+    q_pos = jnp.arange(T, dtype=jnp.int32) + q_offset
+
+    if S <= chunk or T == 1 or k_positions is not None:
+        k_pos = (jnp.arange(S, dtype=jnp.int32)
+                 if k_positions is None else k_positions)
+        s = _gqa_scores(qg, k, scale, sdt)
+        s = L.softcap(s, softcap)
+        if k_positions is None:
+            bias = _mask_bias(q_pos, k_pos, causal=causal, window=window,
+                              kv_len=kv_len)
+        else:
+            ok = (k_pos[None, :] >= 0) & (k_pos[None, :] <= q_pos[:, None])
+            if window:
+                ok &= k_pos[None, :] > q_pos[:, None] - window
+            bias = jnp.where(ok, 0.0, NEG_INF)
+        s = s + bias.astype(sdt)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgts,bskh->btkgh", p, v.astype(sdt),
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, T, H, vd).astype(q.dtype)
+
+    # --- online-softmax scan over KV chunks (flash-in-XLA) -----------------
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KV, vd).transpose(1, 0, 2, 3, 4)
+    eff_len = kv_len if kv_len is not None else S
+
+    def step(carry, xs):
+        m, l, acc = carry
+        ci, kb, vb = xs
+        k_pos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        s = _gqa_scores(qg, kb, scale, sdt)
+        s = L.softcap(s, softcap)
+        s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window,
+                           kv_len=eff_len).astype(sdt)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1).astype(jnp.float32))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s.astype(jnp.float32) - m_new[..., None]).astype(sdt)
+        l_new = l * corr + jnp.sum(p, axis=-1).astype(jnp.float32)
+        o = jnp.einsum("bkgts,bskh->bkgth", p, vb.astype(sdt),
+                       preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + o
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, T), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, T), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, T, vd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.arange(n_chunks, dtype=jnp.int32), kc, vc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, T, H, vd).astype(q.dtype)
+
+
+def attend_local_banded(q, k, v, *, window: int, softcap: float = 0.0,
+                        lowp: bool = False):
+    """Exact sliding-window causal attention in O(T * 2W).
+
+    q/k/v: (B,T,H|KV,hd), T % window may be ragged (padded internally).
+    Each q block of size W attends to kv blocks [i-1, i] with an in-band mask.
+    """
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    W = window
+    nb = -(-T // W)
+    pad = nb * W - T
+    if pad:
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        qp, kp, vp = q, k, v
+    qb = qp.reshape(B, nb, W, KV, G, hd)
+    kb = kp.reshape(B, nb, W, KV, hd)
+    vb = vp.reshape(B, nb, W, KV, hd)
+    # kv for block i = concat(block i-1, block i)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)          # (B,nb,2W,KV,hd)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    scale = 1.0 / math.sqrt(hd)
+    sdt = jnp.bfloat16 if lowp else jnp.float32
+    s = jnp.einsum("bnqkgh,bnskh->bnkgqs", qb.astype(sdt),
+                   k2.astype(sdt), preferred_element_type=sdt) * sdt(scale)
+    s = L.softcap(s, softcap)
+    q_pos = jnp.arange(W)[:, None]                       # within-block q idx
+    k_pos = jnp.arange(2 * W)[None, :] - W               # relative to block start
+    ok = (k_pos <= q_pos) & (k_pos > q_pos - W)
+    # first block must not see the zero-padded "previous" block
+    first = jnp.arange(nb)[:, None, None] == 0
+    ok = ok[None, :, :] & ~(first & (k_pos[None] < 0))
+    s = s + jnp.where(ok, 0.0, NEG_INF).astype(sdt)[:, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnkgqs,bnskh->bnqkgh", p, v2.astype(sdt),
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(B, nb * W, H, hd)[:, :T]
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full mixer: project -> rope -> attend -> out
+# ---------------------------------------------------------------------------
+
+
+def attn_apply(p, x, cfg: ArchConfig, *, mixer: str, positions=None,
+               cache=None, kv_len=None, enc_out=None, enc_cache=None):
+    """Self-attention (+ optional cross). Returns (out, new_cache).
+
+    cache: None (train/prefill no-cache) or dict(k=(B,S,KV,hd), v=...) with
+    kv_len giving the number of valid entries (decode).
+    """
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.dense_apply(p["wq"], x)           # (B,T,H,hd)
+    k = L.dense_apply(p["wk"], x)           # (B,T,KV,hd)
+    v = L.dense_apply(p["wv"], x)
+    if cfg.qk_norm:
+        q = L.norm_apply(p["q_norm"], q, "rmsnorm", unit_offset=cfg.norm_unit_offset)
+        k = L.norm_apply(p["k_norm"], k, "rmsnorm", unit_offset=cfg.norm_unit_offset)
+    if positions is None:
+        positions = jnp.arange(T, dtype=jnp.int32)[None, :] + (
+            0 if kv_len is None else kv_len)
+    if cfg.use_rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        S_buf = cache["k"].shape[1]
+        if mixer == "local" and S_buf < 10**9 and S_buf == cfg.window_size:
+            # ring buffer: slot j holds absolute position
+            # a_j = kv_len - ((kv_len - j) mod S_buf)  (T==1 decode only)
+            slot = jnp.mod(kv_len, S_buf)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+            new_cache = {"k": ck, "v": cv}
+            j = jnp.arange(S_buf, dtype=jnp.int32)
+            k_pos = kv_len - jnp.mod(kv_len - j, S_buf)
+            o = attend(q, ck, cv, causal=True, window=cfg.window_size,
+                       softcap=cfg.attn_softcap, q_offset=kv_len,
+                       k_positions=k_pos, lowp=cfg.attn_lowp_probs)
+        else:
+            # write this step's k/v at kv_len, attend over the whole buffer
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), kv_len, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), kv_len, axis=1)
+            new_cache = {"k": ck, "v": cv}
+            window = cfg.window_size if mixer == "local" else 0
+            o = attend(q, ck, cv, causal=True, window=window,
+                       softcap=cfg.attn_softcap, q_offset=kv_len,
+                       kv_len=kv_len + T, lowp=cfg.attn_lowp_probs)
+    elif mixer == "local" and T > cfg.window_size:
+        o = attend_local_banded(q, k, v, window=cfg.window_size,
+                                softcap=cfg.attn_softcap,
+                                lowp=cfg.attn_lowp_probs)
+    else:
+        window = cfg.window_size if mixer == "local" else 0
+        o = attend(q, k, v, causal=True, window=window,
+                   softcap=cfg.attn_softcap, lowp=cfg.attn_lowp_probs)
+    out = L.dense_in3_apply(p["wo"], o)
+
+    if mixer == "cross":
+        cq = L.dense_apply(p["c_wq"], x)
+        if enc_cache is not None:
+            ek, ev = enc_cache["k"], enc_cache["v"]
+        else:
+            ek = L.dense_apply(p["c_wk"], enc_out)
+            ev = L.dense_apply(p["c_wv"], enc_out)
+        co = attend(cq, ek, ev, causal=False)
+        out = out + L.dense_in3_apply(p["c_wo"], co)
+    return out, new_cache
+
+
+def encoder_attn_apply(p, x, cfg: ArchConfig):
+    """Bidirectional self-attention (whisper encoder)."""
+    q = L.dense_apply(p["wq"], x)
+    k = L.dense_apply(p["wk"], x)
+    v = L.dense_apply(p["wv"], x)
+    o = attend(q, k, v, causal=False)
+    return L.dense_in3_apply(p["wo"], o)
+
+
+def make_attn_cache(cfg: ArchConfig, batch: int, max_len: int, dtype, *,
+                    mixer: str = "attn"):
+    """Cache for one attention layer. Local (sliding-window) layers use a
+    ring buffer of exactly `window` slots — O(window) state is what makes
+    hybrid archs decodable at 500k context."""
+    hd = cfg.resolved_head_dim
+    S = max_len if mixer != "local" else min(max_len, cfg.window_size)
+    return {
+        "k": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, S, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ArchConfig, dtype):
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 8)
+    qk = m.qk_nope_head_dim
+    return {
+        "w_dq": L.dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": L.norm_init(m.q_lora_rank, "rmsnorm"),
+        "w_uq": L.dense_init(ks[1], m.q_lora_rank, H * (qk + m.qk_rope_head_dim),
+                             dtype, out_shape=(H, qk + m.qk_rope_head_dim)),
+        "w_dkv": L.dense_init(ks[2], d, m.kv_lora_rank, dtype),
+        "kv_norm": L.norm_init(m.kv_lora_rank, "rmsnorm"),
+        "w_uk": L.dense_init(ks[3], m.kv_lora_rank, H * qk, dtype,
+                             out_shape=(H, qk)),
+        "w_uv": L.dense_init(ks[4], m.kv_lora_rank, H * m.v_head_dim, dtype,
+                             out_shape=(H, m.v_head_dim)),
+        "w_kr": L.dense_init(ks[5], d, m.qk_rope_head_dim, dtype),
+        "wo": L.dense_in3_init(ks[6], H, m.v_head_dim, d, dtype),
+    }
+
+
+def mla_apply(p, x, cfg: ArchConfig, *, cache=None, kv_len=None):
+    """Returns (out, new_cache). Cache = compressed {c_kv, k_rope}."""
+    m: MLAConfig = cfg.mla
+    B, T, _ = x.shape
+    H = cfg.num_heads
+    qk, qr = m.qk_nope_head_dim, m.qk_rope_head_dim
+    scale = 1.0 / math.sqrt(qk + qr)
+
+    cq = L.norm_apply(p["q_norm"], L.dense_apply(p["w_dq"], x), "rmsnorm")
+    q = L.dense_apply(p["w_uq"], cq)                     # (B,T,H,qk+qr)
+    q_nope, q_rope = q[..., :qk], q[..., qk:]
+    c_kv = L.norm_apply(p["kv_norm"], L.dense_apply(p["w_dkv"], x), "rmsnorm")
+    k_rope = L.dense_apply(p["w_kr"], x)[:, :, None, :]  # (B,T,1,qr)
+    offset = 0 if kv_len is None else kv_len
+    positions = jnp.arange(T, dtype=jnp.int32)[None, :] + offset
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = L.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is None:
+        # train/prefill: reconstruct full k, v
+        k_nope = jnp.einsum("btc,chk->bthk", c_kv, p["w_uk"]["kernel"])
+        v = jnp.einsum("btc,chk->bthk", c_kv, p["w_uv"]["kernel"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, T, H, qr))],
+            axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = attend(qf, k, v, causal=True, lowp=cfg.attn_lowp_probs)
+        out = L.dense_in3_apply(p["wo"], o)
+        return out, None
+
+    # decode: absorbed form over the compressed cache
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), kv_len, axis=1)
+    ckr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), kv_len, axis=1)
+    new_cache = {"c_kv": ckv, "k_rope": ckr}
+    S = ckv.shape[1]
+    # absorb W_uk into q: q' (B,T,H,kv_lora)
+    q_abs = jnp.einsum("bthk,chk->bthc", q_nope.astype(jnp.float32),
+                       p["w_uk"]["kernel"].astype(jnp.float32))
+    s = (jnp.einsum("bthc,bsc->bhts", q_abs, ckv.astype(jnp.float32)) +
+         jnp.einsum("bthr,bsr->bhts", q_rope.astype(jnp.float32),
+                    ckr.astype(jnp.float32))) * scale
+    k_pos = jnp.arange(S, dtype=jnp.int32)
+    q_pos = jnp.arange(T, dtype=jnp.int32) + kv_len
+    s = s + _mask_bias(q_pos, k_pos, causal=True, window=0, kv_len=kv_len + T)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhts,bsc->bthc", pr, ckv.astype(jnp.float32))
+    o = jnp.einsum("bthc,chk->bthk", o_c, p["w_uv"]["kernel"].astype(jnp.float32))
+    out = L.dense_in3_apply(p["wo"], o.astype(x.dtype))
+    return out, new_cache
+
+
+def make_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }

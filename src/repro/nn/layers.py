@@ -1,0 +1,179 @@
+"""Primitive layers: dense, norms, embeddings, activations, RoPE."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _trunc_normal(key, shape, std, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, *,
+               bias: bool = False, out_shape=None):
+    """Dense kernel. ``out_shape`` reshapes the output dim (e.g. (H, hd)) so
+    sharding rules see the head axis explicitly."""
+    std = 1.0 / math.sqrt(d_in)
+    shape = (d_in,) + tuple(out_shape) if out_shape else (d_in, d_out)
+    p = {"kernel": _trunc_normal(key, shape, std, dtype)}
+    if bias:
+        p["bias"] = jnp.zeros(shape[1:], dtype)
+    return p
+
+
+def dense_apply(p, x):
+    k = p["kernel"]
+    if k.ndim == 2:
+        y = jnp.einsum("...d,df->...f", x, k)
+    elif k.ndim == 3:  # (d, H, hd)
+        y = jnp.einsum("...d,dhf->...hf", x, k)
+    else:
+        raise ValueError(k.shape)
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+def dense_in3_apply(p, x):
+    """Contract a (H, hd, d) kernel against (..., H, hd) input."""
+    y = jnp.einsum("...hf,hfd->...d", x, p["kernel"])
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+def dense_in3_init(key, h: int, hd: int, d_out: int, dtype=jnp.bfloat16,
+                   bias: bool = False):
+    std = 1.0 / math.sqrt(h * hd)
+    p = {"kernel": _trunc_normal(key, (h, hd, d_out), std, dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(d: int, norm_type: str = "rmsnorm", dtype=jnp.float32):
+    if norm_type == "rmsnorm":
+        # zero-centered scale, ALWAYS applied as (1 + scale): gemma's (1+w)
+        # and the plain w-with-ones-init parameterizations are identical up
+        # to this storage convention, so one convention serves every arch.
+        return {"scale": jnp.zeros((d,), dtype)}
+    if norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(norm_type)
+
+
+def norm_apply(p, x, norm_type: str = "rmsnorm", *, unit_offset: bool = True,
+               eps: float = 1e-6):
+    # unit_offset kept for API stability; rmsnorm is always (1 + scale)
+    del unit_offset
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        y = y * (1.0 + p["scale"].astype(jnp.float32))
+    elif norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(norm_type)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return {"table": _trunc_normal(key, (vocab, d), 1.0, dtype)}
+
+
+def embedding_apply(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def positional_init(key, max_pos: int, d: int, dtype=jnp.bfloat16):
+    return {"table": _trunc_normal(key, (max_pos, d), 0.02, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# activations / MLP variants
+# ---------------------------------------------------------------------------
+
+
+def squared_relu(x):
+    return jnp.square(jax.nn.relu(x))
+
+
+def mlp_init(key, d: int, d_ff: int, mlp_type: str, dtype=jnp.bfloat16,
+             *, bias: bool = False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "wi_gate": dense_init(k1, d, d_ff, dtype, bias=bias),
+            "wi_up": dense_init(k2, d, d_ff, dtype, bias=bias),
+            "wo": dense_init(k3, d_ff, d, dtype, bias=bias),
+        }
+    if mlp_type in ("relu2", "gelu"):
+        return {
+            "wi": dense_init(k1, d, d_ff, dtype, bias=bias),
+            "wo": dense_init(k2, d_ff, d, dtype, bias=bias),
+        }
+    raise ValueError(mlp_type)
+
+
+def mlp_apply(p, x, mlp_type: str):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(dense_apply(p["wi_gate"], x)) * dense_apply(p["wi_up"], x)
+        return dense_apply(p["wo"], h)
+    if mlp_type == "geglu":
+        h = jax.nn.gelu(dense_apply(p["wi_gate"], x), approximate=True) \
+            * dense_apply(p["wi_up"], x)
+        return dense_apply(p["wo"], h)
+    if mlp_type == "relu2":
+        return dense_apply(p["wo"], squared_relu(dense_apply(p["wi"], x)))
+    if mlp_type == "gelu":
+        return dense_apply(p["wo"],
+                           jax.nn.gelu(dense_apply(p["wi"], x), approximate=True))
+    raise ValueError(mlp_type)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., T, hd/2)
+    sin = jnp.sin(angles)[..., None, :]                # (..., T, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x

@@ -1,0 +1,45 @@
+"""Printed bespoke MLP classifiers (the paper's model family).
+
+Mubarik et al. (MICRO'20) printed MLPs are tiny fully-connected nets
+(one hidden layer, ReLU, hardwired coefficients). We keep them as plain
+dense stacks; ``repro.core`` compresses their weight pytrees and
+``repro.core.hw_model`` prices them as bespoke printed circuits.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_init(key, layer_dims: Sequence[int], dtype=jnp.float32):
+    """layer_dims: (in, hidden..., out). Returns {"layers": ({"w","b"}, ...)}."""
+    params = []
+    ks = jax.random.split(key, len(layer_dims) - 1)
+    for k, d_in, d_out in zip(ks, layer_dims[:-1], layer_dims[1:]):
+        w = jax.random.uniform(k, (d_in, d_out), jnp.float32,
+                               -1.0, 1.0) * math.sqrt(6.0 / (d_in + d_out))
+        params.append({"w": w.astype(dtype), "b": jnp.zeros((d_out,), dtype)})
+    return {"layers": tuple(params)}
+
+
+def mlp_forward(params, x):
+    """x: (B, F) -> logits (B, C). ReLU hidden activations (printed-friendly:
+    ReLU is a comparator+mux in bespoke logic)."""
+    hs = params["layers"]
+    for i, layer in enumerate(hs):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(hs) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def accuracy(params, x, y) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(mlp_forward(params, x), -1) == y)
+                    .astype(jnp.float32))
+
+
+def layer_dims(params) -> Tuple[Tuple[int, int], ...]:
+    return tuple(tuple(l["w"].shape) for l in params["layers"])

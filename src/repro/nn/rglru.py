@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block = two branches from the input:
+  gate branch:      W_gate -> GeLU
+  recurrent branch: W_x -> causal depthwise conv (K=4) -> RG-LRU
+output = (lru_out * gelu(gate)) @ W_out
+
+RG-LRU recurrence (all elementwise over lru_width):
+  r_t = sigmoid(x_t W_a + b_a)               recurrence gate
+  i_t = sigmoid(x_t W_i + b_i)               input gate
+  log a_t = -c * r_t * softplus(Lambda)      (a = sigmoid(Lambda) ^ (c r_t))
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RGLRUConfig
+from repro.nn import layers as L
+from repro.nn.ssm import _causal_conv
+
+
+def _width(cfg: ArchConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def rglru_init(key, cfg: ArchConfig, dtype):
+    r: RGLRUConfig = cfg.rglru
+    w = _width(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    # Lambda init so a = sigmoid(Lambda) is in [0.9, 0.999]
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u) - jnp.log1p(-u)
+    return {
+        "w_x": L.dense_init(ks[0], d, w, dtype),
+        "w_gate": L.dense_init(ks[1], d, w, dtype),
+        "conv": {"kernel": L._trunc_normal(ks[2], (r.d_conv, w),
+                                           1.0 / math.sqrt(r.d_conv), dtype),
+                 "bias": jnp.zeros((w,), dtype)},
+        "w_a": {"kernel": L._trunc_normal(ks[3], (w, w), w ** -0.5, dtype),
+                "bias": jnp.zeros((w,), jnp.float32)},
+        "w_i": {"kernel": L._trunc_normal(ks[5], (w, w), w ** -0.5, dtype),
+                "bias": jnp.zeros((w,), jnp.float32)},
+        "Lambda": lam,
+        "w_out": L.dense_init(ks[0], w, d, dtype),
+    }
+
+
+def _rglru_scan(x, r_gate, i_gate, lam, c, h0):
+    """x/r_gate/i_gate: (B,T,w) fp32; returns y (B,T,w), h_last (B,w)."""
+    log_a = -c * r_gate * jax.nn.softplus(lam)[None, None]     # (B,T,w), <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = beta * (i_gate * x)
+
+    def step(h, xs):
+        a_t, g_t = xs
+        h = a_t * h + g_t
+        return h, h
+
+    h_last, ys = jax.lax.scan(
+        step, h0, (a.transpose(1, 0, 2), gated.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2), h_last
+
+
+def rglru_apply(p, x, cfg: ArchConfig, *, cache=None):
+    """x: (B,T,d). Returns (out, new_cache).
+
+    cache (decode): {"conv": (B, K-1, w), "h": (B, w)}.
+    """
+    r: RGLRUConfig = cfg.rglru
+    gate = jax.nn.gelu(L.dense_apply(p["w_gate"], x), approximate=True)
+    xb = L.dense_apply(p["w_x"], x)
+    conv_state = cache["conv"] if cache is not None else None
+    xb, new_conv = _causal_conv(xb, p["conv"]["kernel"], p["conv"]["bias"],
+                                state=conv_state)
+    xf = xb.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xf, p["w_a"]["kernel"]
+                                       .astype(jnp.float32)) + p["w_a"]["bias"])
+    i_gate = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xf, p["w_i"]["kernel"]
+                                       .astype(jnp.float32)) + p["w_i"]["bias"])
+
+    h0 = cache["h"] if cache is not None else \
+        jnp.zeros((x.shape[0], xf.shape[-1]), jnp.float32)
+    if cache is not None and x.shape[1] == 1:
+        log_a = -r.c_exponent * r_gate[:, 0] * jax.nn.softplus(p["Lambda"])[None]
+        a = jnp.exp(log_a)
+        beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+        h = a * h0 + beta * (i_gate[:, 0] * xf[:, 0])
+        y = h[:, None]
+        new_cache = {"conv": new_conv, "h": h}
+    else:
+        y, h_last = _rglru_scan(xf, r_gate, i_gate, p["Lambda"],
+                                r.c_exponent, h0)
+        new_cache = None if cache is None else {"conv": new_conv, "h": h_last}
+
+    out = y.astype(x.dtype) * gate
+    return L.dense_apply(p["w_out"], out), new_cache
+
+
+def make_rglru_cache(cfg: ArchConfig, batch: int, dtype):
+    w = _width(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru.d_conv - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

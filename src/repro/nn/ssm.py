@@ -1,0 +1,141 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+TPU adaptation notes (DESIGN.md §3): the CUDA selective-scan kernel keeps the
+recurrent state in SM shared memory and scans time inside the kernel. The
+JAX-native equivalent is a ``lax.scan`` over time with the state resident in
+VMEM/registers (XLA keeps small carries on-chip); channels/state dims are
+fully parallel (VPU lanes). Decode is a single fused state update.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.nn import layers as L
+
+
+def _dims(cfg: ArchConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return s, d_inner, dt_rank
+
+
+def ssm_init(key, cfg: ArchConfig, dtype):
+    s, d_inner, dt_rank = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a = jnp.broadcast_to(jnp.arange(1, s.d_state + 1, dtype=jnp.float32),
+                         (d_inner, s.d_state))
+    dt_init = jnp.exp(jax.random.uniform(ks[4], (d_inner,), jnp.float32)
+                      * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    return {
+        "in_proj": L.dense_init(ks[0], d, 2 * d_inner, dtype),
+        "conv": {"kernel": L._trunc_normal(ks[1], (s.d_conv, d_inner),
+                                           1.0 / math.sqrt(s.d_conv), dtype),
+                 "bias": jnp.zeros((d_inner,), dtype)},
+        "x_proj": L.dense_init(ks[2], d_inner, dt_rank + 2 * s.d_state, dtype),
+        "dt_proj": {"kernel": L._trunc_normal(ks[3], (dt_rank, d_inner),
+                                              dt_rank ** -0.5, jnp.float32),
+                    # softplus^-1(dt) bias so initial dt spans [1e-3, 1e-1]
+                    "bias": (dt_init + jnp.log(-jnp.expm1(-dt_init)))},
+        "A_log": jnp.log(a),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": L.dense_init(ks[5], d_inner, d, dtype),
+    }
+
+
+def _causal_conv(xc, kernel, bias, *, state=None):
+    """Depthwise causal conv. xc: (B,T,C); kernel: (K,C). state: (B,K-1,C)."""
+    K = kernel.shape[0]
+    if state is not None:
+        xc = jnp.concatenate([state.astype(xc.dtype), xc], axis=1)
+        new_state = xc[:, -(K - 1):]
+        pad = 0
+    else:
+        new_state = xc[:, -(K - 1):]
+        pad = K - 1
+    y = jax.lax.conv_general_dilated(
+        xc, kernel[:, None, :],             # (K, 1, C) depthwise
+        window_strides=(1,), padding=[(pad, 0)],
+        dimension_numbers=("NTC", "TIO", "NTC"),
+        feature_group_count=kernel.shape[1])
+    return y + bias, new_state
+
+
+def _selective_scan(u, dt, B_, C_, A, D):
+    """u/dt: (B,T,d); B_/C_: (B,T,N); A: (d,N); D: (d,). Returns y, h_last.
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t ;  y_t = C_t . h_t + D u_t
+    scan over T; state (B,d,N) fp32.
+    """
+    Bsz, T, d = u.shape
+    N = A.shape[1]
+
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs                          # (B,d) (B,d) (B,N) (B,N)
+        da = jnp.exp(dt_t[..., None] * A[None])           # (B,d,N)
+        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + D[None] * u_t
+        return h, y
+
+    xs = (u.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2),
+          B_.transpose(1, 0, 2).astype(jnp.float32),
+          C_.transpose(1, 0, 2).astype(jnp.float32))
+    h0 = jnp.zeros((Bsz, d, N), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h_last
+
+
+def ssm_apply(p, x, cfg: ArchConfig, *, cache=None):
+    """Mamba-1 block. x: (B,T,d). Returns (out, new_cache).
+
+    cache (decode): {"conv": (B, K-1, d_inner), "h": (B, d_inner, N)}.
+    """
+    s, d_inner, dt_rank = _dims(cfg)
+    xz = L.dense_apply(p["in_proj"], x)
+    xc, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(xc, p["conv"]["kernel"], p["conv"]["bias"],
+                                state=conv_state)
+    xc = jax.nn.silu(xc)
+
+    proj = L.dense_apply(p["x_proj"], xc)
+    dt_raw = proj[..., :dt_rank]
+    B_ = proj[..., dt_rank:dt_rank + s.d_state]
+    C_ = proj[..., dt_rank + s.d_state:]
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt_raw.astype(jnp.float32),
+                   p["dt_proj"]["kernel"]) + p["dt_proj"]["bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if cache is not None and x.shape[1] == 1:
+        # single-step decode: one state update, no scan
+        h = cache["h"]
+        da = jnp.exp(dt[:, 0, :, None] * A[None])
+        h = da * h + (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+            * B_[:, 0, None, :].astype(jnp.float32)
+        y = jnp.einsum("bdn,bn->bd", h, C_[:, 0].astype(jnp.float32)) \
+            + p["D"][None] * xc[:, 0].astype(jnp.float32)
+        y = y[:, None]
+        new_cache = {"conv": new_conv, "h": h}
+    else:
+        y, h_last = _selective_scan(xc, dt, B_, C_, A, p["D"])
+        new_cache = None if cache is None else {"conv": new_conv, "h": h_last}
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return L.dense_apply(p["out_proj"], y), new_cache
+
+
+def make_ssm_cache(cfg: ArchConfig, batch: int, dtype):
+    s, d_inner, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_inner), dtype),
+        "h": jnp.zeros((batch, d_inner, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,388 @@
+"""Model assembly: blocks -> segments -> language model.
+
+Depth is executed as ``lax.scan`` over *segments*: each segment stacks the
+parameters of its repeating pattern along a leading ``repeats`` axis, so the
+HLO is O(pattern length), not O(num_layers). Heterogeneous stacks (gemma2
+local/global alternation, griffin rec-rec-local, VLM cross-attn every 5th
+layer, deepseek dense-then-MoE) are expressed as patterns, never as traced
+branches — FLOP accounting in the roofline stays exact.
+
+Public entry points:
+  init(key, cfg)                     -> params pytree
+  forward(params, batch, cfg)        -> logits (train / prefill)
+  decode_step(params, state, tok, cfg) -> (logits, state)  (one-token serve)
+  init_decode_state(cfg, batch, max_len, dtype) -> cache pytree
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec, Segment
+from repro.nn import attention as A
+from repro.nn import layers as L
+from repro.nn import moe as M
+from repro.nn import rglru as R
+from repro.nn import ssm as S
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ArchConfig, spec: LayerSpec, dtype):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": L.norm_init(cfg.d_model, cfg.norm_type)}
+    if spec.mixer in ("attn", "local"):
+        if cfg.mla is not None:
+            p["mixer"] = A.mla_init(ks[0], cfg, dtype)
+        else:
+            p["mixer"] = A.attn_init(ks[0], cfg, dtype)
+    elif spec.mixer == "cross":
+        p["mixer"] = A.attn_init(ks[0], cfg, dtype, cross=True)
+        p["cross_gate"] = jnp.zeros((), jnp.float32)
+        p["norm_cross"] = L.norm_init(cfg.d_model, cfg.norm_type)
+    elif spec.mixer == "ssm":
+        p["mixer"] = S.ssm_init(ks[0], cfg, dtype)
+    elif spec.mixer == "rec":
+        p["mixer"] = R.rglru_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "dense":
+        p["norm2"] = L.norm_init(cfg.d_model, cfg.norm_type)
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    elif spec.ffn == "moe":
+        p["norm2"] = L.norm_init(cfg.d_model, cfg.norm_type)
+        p["moe"] = M.moe_init(ks[1], cfg, dtype)
+    if cfg.post_norm:
+        p["post_norm1"] = L.norm_init(cfg.d_model, cfg.norm_type)
+        if spec.ffn != "none":
+            p["post_norm2"] = L.norm_init(cfg.d_model, cfg.norm_type)
+    return p
+
+
+def _norm(p, x, cfg):
+    return L.norm_apply(p, x, cfg.norm_type, unit_offset=cfg.norm_unit_offset)
+
+
+def _block_apply(p, x, cfg: ArchConfig, spec: LayerSpec, *, cache=None,
+                 kv_len=None, enc_out=None, positions=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(p["norm1"], x, cfg)
+    if spec.mixer in ("attn", "local"):
+        if cfg.mla is not None:
+            o, new_cache = A.mla_apply(p["mixer"], h, cfg, cache=cache,
+                                       kv_len=kv_len)
+        else:
+            o, new_cache = A.attn_apply(p["mixer"], h, cfg, mixer=spec.mixer,
+                                        cache=cache, kv_len=kv_len,
+                                        positions=positions)
+    elif spec.mixer == "cross":
+        # self-attention sublayer, then a gated cross-attention sublayer
+        o, new_cache = A.attn_apply(p["mixer"], h, cfg, mixer="attn",
+                                    cache=cache, kv_len=kv_len,
+                                    positions=positions)
+        if cfg.post_norm:
+            o = _post(p, "post_norm1", o, cfg)
+        x = x + o
+        hc = _norm(p["norm_cross"], x, cfg)
+        cq = L.dense_apply(p["mixer"]["c_wq"], hc)
+        ek = L.dense_apply(p["mixer"]["c_wk"], enc_out)
+        ev = L.dense_apply(p["mixer"]["c_wv"], enc_out)
+        co = A.attend(cq, ek, ev, causal=False)
+        o = jnp.tanh(p["cross_gate"]).astype(x.dtype) * L.dense_in3_apply(
+            p["mixer"]["c_wo"], co).astype(x.dtype)
+        x = x + o
+        o = jnp.zeros_like(x)  # residual already applied above
+    elif spec.mixer == "ssm":
+        o, new_cache = S.ssm_apply(p["mixer"], h, cfg, cache=cache)
+    elif spec.mixer == "rec":
+        o, new_cache = R.rglru_apply(p["mixer"], h, cfg, cache=cache)
+    else:
+        raise ValueError(spec.mixer)
+    if cfg.post_norm:
+        o = _post(p, "post_norm1", o, cfg)
+    x = x + o
+
+    if spec.ffn == "dense":
+        o = L.mlp_apply(p["mlp"], _norm(p["norm2"], x, cfg), cfg.mlp_type)
+        if cfg.post_norm:
+            o = _post(p, "post_norm2", o, cfg)
+        x = x + o
+    elif spec.ffn == "moe":
+        o, aux = M.moe_apply(p["moe"], _norm(p["norm2"], x, cfg), cfg)
+        if cfg.post_norm:
+            o = _post(p, "post_norm2", o, cfg)
+        x = x + o
+    return x, new_cache, aux
+
+
+def _post(p, name, o, cfg):
+    return L.norm_apply(p[name], o, cfg.norm_type,
+                        unit_offset=cfg.norm_unit_offset)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, max_len: int,
+                 dtype):
+    if spec.mixer in ("attn", "cross"):
+        if cfg.mla is not None:
+            return A.make_mla_cache(cfg, batch, max_len, dtype)
+        return A.make_attn_cache(cfg, batch, max_len, dtype, mixer="attn")
+    if spec.mixer == "local":
+        if cfg.mla is not None:
+            return A.make_mla_cache(cfg, batch, max_len, dtype)
+        return A.make_attn_cache(cfg, batch, max_len, dtype, mixer="local")
+    if spec.mixer == "ssm":
+        return S.make_ssm_cache(cfg, batch, dtype)
+    if spec.mixer == "rec":
+        return R.make_rglru_cache(cfg, batch, dtype)
+    raise ValueError(spec.mixer)
+
+
+# ---------------------------------------------------------------------------
+# segments (scan over repeats)
+# ---------------------------------------------------------------------------
+
+
+def _segment_init(key, cfg: ArchConfig, seg: Segment, dtype):
+    """Stack pattern-position params along a leading `repeats` axis."""
+    def one_repeat(k):
+        kk = jax.random.split(k, len(seg.pattern))
+        return tuple(_block_init(kk[i], cfg, spec, dtype)
+                     for i, spec in enumerate(seg.pattern))
+    keys = jax.random.split(key, seg.repeats)
+    per_repeat = [one_repeat(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_repeat)
+
+
+def _segment_apply(seg_params, x, cfg: ArchConfig, seg: Segment, *,
+                   caches=None, kv_len=None, enc_out=None, positions=None,
+                   remat: bool = True, unroll: bool = False):
+    """Scan the repeating pattern. caches: stacked pytree (leading=repeats) or
+    None. Returns (x, new_caches, aux_sum). ``unroll=True`` replaces the scan
+    with a python loop — used by the roofline dry-run, where XLA's
+    cost_analysis counts a while body once regardless of trip count."""
+
+    def body(carry, xs):
+        x, aux = carry
+        params, cache_in = xs
+        new_caches = []
+        for i, spec in enumerate(seg.pattern):
+            c = None if cache_in is None else cache_in[i]
+            x, nc, a = _block_apply(params[i], x, cfg, spec, cache=c,
+                                    kv_len=kv_len, enc_out=enc_out,
+                                    positions=positions)
+            new_caches.append(nc)
+            aux = aux + a
+        out_caches = None if cache_in is None else tuple(new_caches)
+        return (x, aux), out_caches
+
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+
+    xs = (seg_params, caches)
+    if unroll:
+        carry = (x, jnp.zeros((), jnp.float32))
+        ys = []
+        for r in range(seg.repeats):
+            xs_r = jax.tree_util.tree_map(lambda a: a[r], xs)
+            carry, y = body(carry, xs_r)
+            ys.append(y)
+        (x, aux) = carry
+        new_caches = (None if caches is None else
+                      jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ys))
+        return x, new_caches, aux
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ArchConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "embed": L.embedding_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "segments": tuple(
+            _segment_init(k, cfg, seg, dtype)
+            for k, seg in zip(jax.random.split(ks[1], len(cfg.segments)),
+                              cfg.segments)),
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm_type),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[2], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.max_position_embeddings:
+        p["pos_embed"] = L.positional_init(
+            ks[3], cfg.max_position_embeddings, cfg.d_model, dtype)
+    if cfg.encoder is not None:
+        enc_seg = Segment((LayerSpec("attn", "dense"),), cfg.encoder.num_layers)
+        # encoder is bidirectional: reuse attn params, applied non-causally
+        p["encoder"] = {
+            "segments": (_segment_init(ks[4], cfg, enc_seg, dtype),),
+            "final_norm": L.norm_init(cfg.d_model, cfg.norm_type),
+            "pos_embed": L.positional_init(
+                ks[5], cfg.encoder.num_frames, cfg.d_model, dtype),
+        }
+    return p
+
+
+def _encoder_forward(p, frames, cfg: ArchConfig, *, remat=True,
+                     unroll: bool = False):
+    """frames: stub embeddings (B, F, d_model) — the conv frontend is a stub
+    per the assignment; positions are learned."""
+    x = frames + p["pos_embed"]["table"][None, :frames.shape[1]].astype(frames.dtype)
+    enc_seg = Segment((LayerSpec("attn", "dense"),), cfg.encoder.num_layers)
+
+    def body(carry, params):
+        x, _ = carry
+        blk = params[0]
+        h = _norm(blk["norm1"], x, cfg)
+        o = A.encoder_attn_apply(blk["mixer"], h, cfg)
+        x = x + o
+        o = L.mlp_apply(blk["mlp"], _norm(blk["norm2"], x, cfg), cfg.mlp_type)
+        x = x + o
+        return (x, jnp.zeros((), jnp.float32)), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if unroll:
+        carry = (x, jnp.zeros((), jnp.float32))
+        n = cfg.encoder.num_layers
+        for r in range(n):
+            carry, _ = body(carry, jax.tree_util.tree_map(
+                lambda a: a[r], p["segments"][0]))
+        x = carry[0]
+    else:
+        (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                 p["segments"][0])
+    return _norm(p["final_norm"], x, cfg)
+
+
+def _embed_tokens(p, tokens, cfg: ArchConfig, offset=None):
+    x = L.embedding_apply(p["embed"], tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.max_position_embeddings:
+        T = tokens.shape[1]
+        if offset is None:
+            pos = p["pos_embed"]["table"][None, :T]
+        else:
+            start = jnp.minimum(offset, cfg.max_position_embeddings - T)
+            pos = jax.lax.dynamic_slice_in_dim(
+                p["pos_embed"]["table"], start, T, axis=0)[None]
+        x = x + pos.astype(x.dtype)
+    return x
+
+
+def _lm_head(p, x, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", x, p["embed"]["table"])
+    else:
+        logits = L.dense_apply(p["lm_head"], x)
+    return L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def forward(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *,
+            remat: bool = True, unroll: bool = False):
+    """Train/prefill forward. batch: {"tokens": (B,T)[, "frames": (B,F,d)]
+    [, "patches": (B,P,d)]}. Returns (logits fp32 (B,T,V), aux_loss)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg)
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = _encoder_forward(params["encoder"], batch["frames"], cfg,
+                                   remat=remat, unroll=unroll)
+    elif cfg.vision is not None:
+        enc_out = batch["patches"]          # stub patch embeddings at d_model
+    aux_total = jnp.zeros((), jnp.float32)
+    for seg_params, seg in zip(params["segments"], cfg.segments):
+        x, _, aux = _segment_apply(seg_params, x, cfg, seg, enc_out=enc_out,
+                                   remat=remat, unroll=unroll)
+        aux_total = aux_total + aux
+    x = _norm(params["final_norm"], x, cfg)
+    return _lm_head(params, x, cfg), aux_total
+
+
+# ---------------------------------------------------------------------------
+# decoding
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    """Stacked caches mirroring the segment structure + kv_len counter +
+    (enc-dec/VLM) encoder context placeholder."""
+    caches = []
+    for seg in cfg.segments:
+        def one(spec):
+            return _layer_cache(cfg, spec, batch, max_len, dtype)
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[tuple(one(spec) for spec in seg.pattern)
+              for _ in range(seg.repeats)])
+        caches.append(stacked)
+    state = {"caches": tuple(caches),
+             "kv_len": jnp.zeros((), jnp.int32)}
+    if cfg.encoder is not None:
+        state["enc_out"] = jnp.zeros(
+            (batch, cfg.encoder.num_frames, cfg.d_model), dtype)
+    elif cfg.vision is not None:
+        state["enc_out"] = jnp.zeros(
+            (batch, cfg.vision.num_patches, cfg.d_model), dtype)
+    return state
+
+
+def decode_step(params, state, tokens, cfg: ArchConfig, *,
+                unroll: bool = False):
+    """One-token decode. tokens: (B, 1). Returns (logits (B,1,V), new state)."""
+    kv_len = state["kv_len"]
+    x = _embed_tokens(params, tokens, cfg, offset=kv_len)
+    enc_out = state.get("enc_out")
+    new_caches = []
+    for seg_params, seg, caches in zip(params["segments"], cfg.segments,
+                                       state["caches"]):
+        x, nc, _ = _segment_apply(seg_params, x, cfg, seg, caches=caches,
+                                  kv_len=kv_len, enc_out=enc_out, remat=False,
+                                  unroll=unroll)
+        new_caches.append(nc)
+    x = _norm(params["final_norm"], x, cfg)
+    logits = _lm_head(params, x, cfg)
+    new_state = dict(state)
+    new_state["caches"] = tuple(new_caches)
+    new_state["kv_len"] = kv_len + tokens.shape[1]
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def active_param_count(params, cfg: ArchConfig) -> int:
+    """MoE-aware: routed experts count at top_k/E fraction (+ shared fully)."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        n = int(leaf.size)
+        if cfg.moe is not None and "experts" in keys:
+            n = int(n * cfg.moe.top_k / cfg.moe.num_experts)
+        total += n
+    return total

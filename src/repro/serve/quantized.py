@@ -1,0 +1,124 @@
+"""Quantized serving: the paper's minimization techniques as serving-path
+weight formats (DESIGN.md §3).
+
+* int8/int4 weights with per-output-channel scales — every >=2D matmul weight
+  leaf becomes {"q": intN, "scale": f32[last_dim]}. Dequant happens after the
+  FSDP all-gather, so both the HBM-read term AND the weight all-gather
+  collective term shrink by 2x/4x (the decode cells are bound by exactly
+  these terms).
+* fp8 (e4m3) KV cache — cache writes cast to fp8, reads upcast; halves the
+  32k-context cache traffic at decode.
+
+The dequantized forward reuses the unmodified model code: `serve_step_quant`
+dequantizes leaf-by-leaf inside the jitted step (XLA keeps the gather on the
+int payload and fuses the dequant into consumers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import quantization as Q
+from repro.nn import transformer as T
+
+
+def _is_quantizable(path_str: str, leaf) -> bool:
+    if len(leaf.shape) < 2 or leaf.shape[-1] < 64:
+        return False
+    import numpy as np
+    return int(np.prod(leaf.shape)) >= (1 << 16)
+
+
+def _qleaf_dtype(bits: int):
+    if bits == 8:
+        return jnp.int8
+    if bits == 4:
+        return jnp.int4
+    raise ValueError(bits)
+
+
+def is_qleaf(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+def quantize_params(params, bits: int = 8):
+    """Real arrays -> quantized pytree (per-channel symmetric)."""
+    from repro.dist.sharding import path_str
+
+    def leaf(path, w):
+        if not _is_quantizable(path_str(path), w):
+            return w
+        qmax = 2.0 ** (bits - 1) - 1.0
+        amax = jnp.max(jnp.abs(w.astype(jnp.float32)),
+                       axis=tuple(range(w.ndim - 1)))
+        scale = jnp.maximum(amax, 1e-8) / qmax
+        q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -qmax, qmax)
+        return {"q": q.astype(_qleaf_dtype(bits)),
+                "scale": scale.astype(jnp.float32)}
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def abstract_quantized(params_shapes, bits: int = 8):
+    """ShapeDtypeStruct pytree -> quantized abstract pytree (dry-run path)."""
+    from repro.dist.sharding import path_str
+
+    def leaf(path, w):
+        if not _is_quantizable(path_str(path), w):
+            return w
+        return {"q": jax.ShapeDtypeStruct(w.shape, _qleaf_dtype(bits)),
+                "scale": jax.ShapeDtypeStruct(w.shape[-1:], jnp.float32)}
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shapes)
+
+
+def dequantize_params(qparams, dtype=jnp.bfloat16):
+    def leaf(x):
+        if is_qleaf(x):
+            return (x["q"].astype(jnp.float32) * x["scale"]).astype(dtype)
+        return x
+    return jax.tree_util.tree_map(leaf, qparams, is_leaf=is_qleaf)
+
+
+def make_quant_serve_step(cfg: ArchConfig, *, unroll: bool = False):
+    dtype = jnp.dtype(cfg.dtype)
+
+    def serve_step(qparams, state, tokens):
+        params = dequantize_params(qparams, dtype)
+        logits, state = T.decode_step(params, state, tokens, cfg,
+                                      unroll=unroll)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, state
+
+    return serve_step
+
+
+def quantized_shardings(cfg: ArchConfig, mesh, params_shapes, bits: int = 8,
+                        fsdp: bool = True):
+    """q inherits the original weight's sharding; scales replicate.
+    fsdp=False drops the data-axis weight sharding (TP-only serving)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist.sharding import param_specs
+    specs = param_specs(params_shapes, mesh, fsdp_enabled=fsdp)
+
+    qshapes = abstract_quantized(params_shapes, bits)
+
+    def merge(spec, orig_leaf, q_leaf):
+        if is_qleaf(q_leaf):
+            return {"q": NamedSharding(mesh, spec),
+                    "scale": NamedSharding(mesh, P())}
+        return NamedSharding(mesh, spec)
+
+    flat_spec = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(
+            x, jax.sharding.PartitionSpec))
+    flat_orig = jax.tree_util.tree_leaves(params_shapes)
+    treedef = jax.tree_util.tree_structure(params_shapes)
+    flat_q = treedef.flatten_up_to(qshapes)
+    merged = [merge(s, o, q) for s, o, q in zip(flat_spec, flat_orig, flat_q)]
+    return jax.tree_util.tree_unflatten(treedef, merged), qshapes

@@ -1,0 +1,38 @@
+"""Sampling strategies for the serving engine (greedy is the engine default;
+these are the stochastic options)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits):
+    """logits (B, V) -> (B,) int32."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(key, logits, t: float = 1.0):
+    if t <= 0:
+        return greedy(logits)
+    return jax.random.categorical(key, logits / t, axis=-1).astype(jnp.int32)
+
+
+def top_k(key, logits, k: int = 40, t: float = 1.0):
+    """Sample from the k highest logits."""
+    v, _ = jax.lax.top_k(logits, k)
+    cutoff = v[..., -1:]
+    masked = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return temperature(key, masked, t)
+
+
+def top_p(key, logits, p: float = 0.9, t: float = 1.0):
+    """Nucleus sampling: smallest prefix of the sorted distribution with
+    cumulative probability >= p."""
+    probs = jax.nn.softmax(logits / max(t, 1e-6), axis=-1)
+    sorted_probs = jnp.sort(probs, axis=-1)[..., ::-1]
+    cum = jnp.cumsum(sorted_probs, axis=-1)
+    # number of tokens kept per row
+    keep = jnp.sum(cum < p, axis=-1, keepdims=True) + 1
+    thresh = jnp.take_along_axis(sorted_probs, keep - 1, axis=-1)
+    masked = jnp.where(probs < thresh, -jnp.inf, logits)
+    return temperature(key, masked, 1.0)

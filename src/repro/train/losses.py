@@ -1,0 +1,28 @@
+"""Losses. Cross-entropy is computed against vocab-sharded logits: the
+log-sum-exp reduction over the (model-axis-sharded) vocab dim lowers to a
+partial reduce + all-reduce under GSPMD — no full logit gather."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, labels, *, z_loss: float = 0.0):
+    """logits (B,T,V) fp32, labels (B,T) int32 -> scalar mean NLL.
+    z_loss: MaxText-style logit-norm regularizer (stabilizes bf16 training)."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - jax.lax.stop_gradient(m)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+    logp = shifted - lse
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse[..., 0] + m[..., 0]))
+    return loss
+
+
+def next_token_loss(logits, tokens, *, aux=0.0, aux_weight: float = 0.01,
+                    z_loss: float = 1e-4):
+    """Shifted LM loss: predict tokens[t+1] from logits[t]."""
+    loss = softmax_xent(logits[:, :-1], tokens[:, 1:], z_loss=z_loss)
+    return loss + aux_weight * aux

@@ -1,0 +1,102 @@
+"""Optimizers + LR schedules in pure JAX (optax is not in the container).
+
+AdamW with fp32 master state regardless of param dtype (bf16 params at scale)
+— the m/v/master leaves inherit the param sharding (FSDP over `data`
+composes with TP over `model`: ZeRO-1/3 hybrid, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"          # cosine | linear | constant
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        t = jnp.clip((step - cfg.warmup_steps) /
+                     jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 1.0 - (1.0 - cfg.min_lr_frac) * t
+    else:  # cosine
+        t = jnp.clip((step - cfg.warmup_steps) /
+                     jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * \
+            (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1t
+        vh = v / b2t
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    # flatten to avoid is_leaf ambiguity (param trees contain tuple nodes)
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_p = treedef.flatten_up_to(params)
+    triples = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    unf = jax.tree_util.tree_unflatten
+    new_params = unf(treedef, [t[0] for t in triples])
+    new_m = unf(treedef, [t[1] for t in triples])
+    new_v = unf(treedef, [t[2] for t in triples])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, AdamWState(step, new_m, new_v), metrics

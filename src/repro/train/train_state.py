@@ -1,0 +1,98 @@
+"""Train state + the canonical train_step / serve_step used by the trainer,
+the launcher and the multi-pod dry-run."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import transformer as T
+from repro.train import losses
+from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                   adamw_update)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_state(key, cfg: ArchConfig, opt_cfg: AdamWConfig) -> TrainState:
+    params = T.init(key, cfg)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *,
+                    remat: bool = True, microbatch: Optional[int] = None,
+                    compression=None, unroll: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    microbatch: if set, gradient accumulation over batch slices (sequential
+    lax.scan) — the standard large-scale memory lever.
+    compression: optional `repro.core` QAT hook: params -> params applied to
+    the forward pass only (the paper's technique as a first-class feature).
+    """
+
+    def loss_fn(params, batch):
+        fwd_params = compression(params) if compression is not None else params
+        logits, aux = T.forward(fwd_params, batch, cfg, remat=remat,
+                                unroll=unroll)
+        return losses.next_token_loss(logits, batch["tokens"], aux=aux)
+
+    def grads_of(params, batch):
+        if microbatch is None:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        B = batch["tokens"].shape[0]
+        assert B % microbatch == 0, (B, microbatch)
+        n = B // microbatch
+        slices = jax.tree_util.tree_map(
+            lambda x: x.reshape((n, microbatch) + x.shape[1:]), batch)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(a.dtype), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, g), _ = jax.lax.scan(body, (jnp.zeros(()), g0), slices)
+        g = jax.tree_util.tree_map(lambda x: x / n, g)
+        return loss / n, g
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        loss, grads = grads_of(state.params, batch)
+        params, opt, metrics = adamw_update(opt_cfg, grads, state.opt,
+                                            state.params)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, *, unroll: bool = False):
+    """serve_step(params, state, tokens) -> (next_tokens, state).
+    One new token per request against the persistent KV/recurrent cache."""
+
+    def serve_step(params, state, tokens):
+        logits, state = T.decode_step(params, state, tokens, cfg,
+                                      unroll=unroll)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, state
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, unroll: bool = False):
+    """prefill_step(params, batch) -> last-position logits (B, V)."""
+
+    def prefill_step(params, batch):
+        logits, _ = T.forward(params, batch, cfg, remat=False, unroll=unroll)
+        return logits[:, -1]
+
+    return prefill_step

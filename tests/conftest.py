@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: XLA_FLAGS device-count forcing must NOT be set here
+(smoke tests and benches see the single real CPU device; only launch/dryrun.py
+forces 512 placeholder devices, in its own process)."""
+import os
+
+# keep XLA quiet and single-threaded compile deterministic-ish on the 1-core box
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

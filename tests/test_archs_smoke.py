@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Every assigned arch instantiates a REDUCED same-family config and runs:
+  * one forward pass — shape + finiteness asserts
+  * one train step (loss + grads) — finiteness + loss decreases over 3 steps
+  * one-token decode — shape + cache-length bookkeeping
+  * decode-vs-forward logits consistency (the strongest invariant: the
+    cached/absorbed/ring decode paths must agree with the full forward)
+
+Full configs are exercised via jax.eval_shape param counting — validates the
+configs reproduce the published parameter counts without allocating.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ARCH_IDS
+from repro.nn import transformer as T
+
+ALL = sorted(ARCH_IDS)
+
+
+def _batch(key, cfg, B, S):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.encoder is not None:
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder.num_frames, cfg.d_model), jnp.float32) * 0.1
+    if cfg.vision is not None:
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.vision.num_patches, cfg.d_model), jnp.float32) * 0.1
+    return batch
+
+
+def _no_drop(cfg):
+    """Raise MoE capacity so the decode-vs-forward test has no dropped tokens."""
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_forward_smoke(name, key):
+    cfg = ARCHS[name].reduced()
+    params = T.init(key, cfg)
+    B, S = 2, 8
+    batch = _batch(key, cfg, B, S)
+    logits, aux = T.forward(params, batch, cfg)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_train_step_smoke(name, key):
+    cfg = ARCHS[name].reduced()
+    params = T.init(key, cfg)
+    B, S = 2, 8
+    batch = _batch(key, cfg, B, S)
+    labels = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+
+    def loss_fn(p):
+        logits, aux = T.forward(p, batch, cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], -1).mean()
+        return nll + 0.01 * aux
+
+    losses = []
+    for _ in range(3):
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        assert bool(jnp.isfinite(loss))
+        for g in jax.tree_util.tree_leaves(grads):
+            assert bool(jnp.all(jnp.isfinite(g)))
+        params = jax.tree_util.tree_map(
+            lambda p, g: p - 0.05 * g.astype(p.dtype), params, grads)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_decode_matches_forward(name, key):
+    cfg = _no_drop(ARCHS[name].reduced())
+    params = T.init(key, cfg)
+    B, S = 2, 6
+    batch = _batch(key, cfg, B, S)
+    full_logits, _ = T.forward(params, batch, cfg, remat=False)
+
+    state = T.init_decode_state(cfg, B, 16, jnp.float32)
+    if cfg.encoder is not None:
+        state["enc_out"] = T._encoder_forward(
+            params["encoder"], batch["frames"], cfg, remat=False)
+    elif cfg.vision is not None:
+        state["enc_out"] = batch["patches"]
+    outs = []
+    for t in range(S):
+        logits, state = T.decode_step(params, state,
+                                      batch["tokens"][:, t:t + 1], cfg)
+        outs.append(logits[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits), rtol=2e-3, atol=2e-3)
+
+
+# --- full-config fidelity (no allocation) ----------------------------------
+
+EXPECTED_PARAMS_B = {
+    "nemotron-4-340b": (320, 360),
+    "qwen3-0.6b": (0.4, 0.8),
+    "gemma-7b": (7.5, 9.5),
+    "gemma2-2b": (2.2, 3.2),
+    "recurrentgemma-9b": (8.0, 10.5),
+    "whisper-base": (0.05, 0.12),     # +32k-pos table for backbone shapes
+    "falcon-mamba-7b": (6.5, 8.0),
+    "llama-3.2-vision-11b": (9.5, 11.5),
+    "deepseek-v2-236b": (225, 248),
+    "phi3.5-moe-42b-a6.6b": (39, 45),
+}
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_full_config_param_count(name, key):
+    cfg = ARCHS[name]
+    shapes = jax.eval_shape(lambda k: T.init(k, cfg), key)
+    n = sum(int(np.prod(s.shape)) for s in jax.tree_util.tree_leaves(shapes))
+    lo, hi = EXPECTED_PARAMS_B[name]
+    assert lo * 1e9 <= n <= hi * 1e9, f"{name}: {n/1e9:.2f}B not in [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    cfg = ARCHS["phi3.5-moe-42b-a6.6b"]
+    key = jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(lambda k: T.init(k, cfg), key)
+    n = T.active_param_count(shapes, cfg)
+    assert 5.5e9 <= n <= 7.5e9, f"active {n/1e9:.2f}B"

@@ -1,0 +1,54 @@
+"""Unit + property tests for weight clustering (paper §II-C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering as C
+
+
+def test_kmeans_exact_when_k_matches():
+    x = jnp.asarray([-1.0, -1.0, 0.5, 0.5, 2.0, 2.0])
+    cent, a = C._kmeans_1d(x, 3)
+    recon = np.asarray(cent)[np.asarray(a)]
+    np.testing.assert_allclose(recon, np.asarray(x), atol=1e-5)
+
+
+def test_per_input_row_sharing():
+    w = jax.random.normal(jax.random.PRNGKey(0), (6, 20))
+    cb, idx = C.cluster_per_input(w, 4)
+    assert cb.shape == (6, 4) and idx.shape == (6, 20)
+    rec = C.reconstruct_per_input(cb, idx)
+    # each row has at most 4 distinct values => at most 4 multipliers/input
+    for row in np.asarray(rec):
+        assert len(np.unique(row)) <= 4
+
+
+def test_multipliers_needed_counts_distinct_nonzero():
+    cb = jnp.asarray([[0.0, 1.0, 2.0], [3.0, 3.5, 0.0]])
+    idx = jnp.asarray([[0, 1, 1, 2], [0, 0, 1, 2]])
+    # row0 uses clusters {0,1,2}, cluster0 is zero -> 2; row1 uses {0,1,2},
+    # cluster2 is zero -> 2
+    assert C.multipliers_needed(idx, cb) == 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 12), seed=st.integers(0, 2 ** 16))
+def test_property_error_decreases_with_k(k, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (8, 24))
+    e_small = C.clustering_error(w, k)
+    e_big = C.clustering_error(w, min(k * 2, 24))
+    assert e_big <= e_small + 1e-4
+
+
+def test_cluster_ste_gradient_identity():
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    g = jax.grad(lambda w: jnp.sum(C.cluster_ste(w, 3) * 2.0))(w)
+    np.testing.assert_allclose(np.asarray(g), 2.0 * np.ones((4, 16)),
+                               atol=1e-6)
+
+
+def test_layer_codebook_reconstruction_error_small_for_large_k():
+    w = jax.random.normal(jax.random.PRNGKey(2), (16, 16))
+    assert C.clustering_error(w, 16, per_input=False) < \
+        C.clustering_error(w, 2, per_input=False)

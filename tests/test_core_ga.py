@@ -1,0 +1,73 @@
+"""Tests for the NSGA-II search + pareto utilities."""
+import numpy as np
+
+from repro.core import pareto as PR
+from repro.core.compression_spec import LayerMin, ModelMin
+from repro.core.ga import GAConfig, run_nsga2
+
+
+def test_non_dominated_sort_simple():
+    pts = np.array([[0.0, 1.0], [1.0, 0.0], [1.0, 1.0], [2.0, 2.0]])
+    fronts = PR.non_dominated_sort(pts)
+    assert set(fronts[0].tolist()) == {0, 1}
+    assert set(fronts[1].tolist()) == {2}
+    assert set(fronts[2].tolist()) == {3}
+
+
+def test_pareto_front_invariant():
+    rng = np.random.default_rng(0)
+    pts = rng.random((50, 2))
+    front = PR.pareto_front(pts)
+    for i in front:
+        for j in range(len(pts)):
+            assert not PR.dominates(pts[j], pts[i])
+
+
+def test_hypervolume_monotone():
+    a = np.array([[0.5, 0.5]])
+    b = np.array([[0.5, 0.5], [0.2, 0.8]])
+    assert PR.hypervolume_2d(b, (1, 1)) >= PR.hypervolume_2d(a, (1, 1))
+
+
+def test_gain_at_loss():
+    pts = [(0.90, 100.0), (0.87, 20.0), (0.80, 5.0)]
+    g = PR.gain_at_loss(pts, baseline_acc=0.90, baseline_area=100.0,
+                        max_loss=0.05)
+    assert abs(g - 5.0) < 1e-9     # the 0.87/20 point qualifies, 0.80 doesn't
+
+
+def test_nsga2_converges_on_synthetic_objective():
+    """Objective: cost = bits + 10*(1-sparsity); acc proxy penalizes extremes.
+    The GA should find cheaper configs than random init."""
+    def evaluate(spec: ModelMin):
+        bits = np.mean([l.bits for l in spec.layers])
+        sp = np.mean([l.sparsity for l in spec.layers])
+        acc = 1.0 - 0.02 * max(0, 5 - bits) ** 2 - 0.3 * sp ** 2
+        cost = bits * 10 + (1 - sp) * 20
+        return (1.0 - acc, cost)
+
+    res = run_nsga2(2, evaluate, GAConfig(population=12, generations=6, seed=1))
+    assert len(res.population) == 12
+    # best accuracy on the front should be near 1.0 and min cost well below max
+    assert res.objectives[:, 0].min() < 0.05
+    assert res.objectives[:, 1].min() < 60
+    # history recorded per generation
+    assert len(res.history) == 6
+    # pareto: no population member dominates another on the first front
+    front = PR.pareto_front(res.objectives)
+    assert len(front) >= 1
+
+
+def test_nsga2_deterministic():
+    def evaluate(spec):
+        return (sum(l.bits for l in spec.layers) / 16.0,
+                sum(l.sparsity for l in spec.layers))
+    r1 = run_nsga2(2, evaluate, GAConfig(population=8, generations=3, seed=7))
+    r2 = run_nsga2(2, evaluate, GAConfig(population=8, generations=3, seed=7))
+    assert [s.to_json() for s in r1.population] == \
+        [s.to_json() for s in r2.population]
+
+
+def test_spec_json_roundtrip():
+    spec = ModelMin((LayerMin(4, 0.3, 8), LayerMin(None, 0.0, None)), 8)
+    assert ModelMin.from_json(spec.to_json()) == spec

@@ -1,0 +1,81 @@
+"""Tests for the printed bespoke area/power model."""
+import numpy as np
+import pytest
+
+from repro.core import hw_model as HW
+
+
+def test_csd_known_values():
+    # 0 -> 0 digits; powers of two -> 1; 3 = 4-1 -> 2; 7 = 8-1 -> 2
+    assert HW.csd_nonzero_digits(0) == 0
+    for p in (1, 2, 4, 8, 64):
+        assert HW.csd_nonzero_digits(p) == 1
+    assert HW.csd_nonzero_digits(3) == 2
+    assert HW.csd_nonzero_digits(7) == 2
+    assert HW.csd_nonzero_digits(-7) == 2
+    # 0b10101 = 21 -> 3 nonzero digits
+    assert HW.csd_nonzero_digits(21) == 3
+
+
+def test_csd_never_exceeds_binary_ones():
+    for c in range(1, 512):
+        assert HW.csd_nonzero_digits(c) <= bin(c).count("1")
+
+
+def test_zero_weights_cost_nothing():
+    q = np.zeros((8, 4), np.int64)
+    c = HW.layer_cost(q, w_bits=8, in_bits=8)
+    assert c.n_multipliers == 0 and c.mult_fa == 0.0
+
+
+def test_pruning_reduces_cost():
+    rng = np.random.default_rng(0)
+    q = rng.integers(-127, 128, (16, 8))
+    dense = HW.layer_cost(q, w_bits=8, in_bits=8)
+    qp = q.copy()
+    qp[np.abs(qp) < 64] = 0
+    pruned = HW.layer_cost(qp, w_bits=8, in_bits=8)
+    assert pruned.total_fa < dense.total_fa
+    assert pruned.n_multipliers < dense.n_multipliers
+
+
+def test_fewer_bits_cheaper():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(16, 8))
+    q8 = np.round(w / np.abs(w).max() * 127).astype(np.int64)
+    q3 = np.round(w / np.abs(w).max() * 3).astype(np.int64)
+    c8 = HW.layer_cost(q8, w_bits=8, in_bits=8)
+    c3 = HW.layer_cost(q3, w_bits=3, in_bits=8)
+    assert c3.total_fa < 0.5 * c8.total_fa
+
+
+def test_clustering_shares_multipliers():
+    rng = np.random.default_rng(2)
+    q = rng.integers(-127, 128, (8, 32))
+    q[q == 0] = 1
+    dense = HW.layer_cost(q, w_bits=8, in_bits=8)
+    # cluster each row to 3 values
+    idx = np.zeros_like(q)
+    cb = np.zeros((8, 3), np.int64)
+    for i in range(8):
+        qs = np.quantile(q[i], [0.2, 0.5, 0.8]).astype(np.int64)
+        cb[i] = np.where(qs == 0, 1, qs)
+        idx[i] = np.argmin(np.abs(q[i][:, None] - cb[i][None]), axis=1)
+    qc = np.take_along_axis(cb, idx, axis=1)
+    clustered = HW.layer_cost(qc, w_bits=8, in_bits=8, cluster_idx=idx,
+                              cluster_codebook_q=cb)
+    assert clustered.n_multipliers <= 8 * 3
+    assert clustered.mult_fa < dense.mult_fa
+    # adder trees unchanged: sharing saves multipliers, not sums
+    assert clustered.adder_fa == dense.adder_fa
+
+
+def test_mlp_cost_aggregates():
+    rng = np.random.default_rng(3)
+    q1 = rng.integers(-127, 128, (11, 10))
+    q2 = rng.integers(-127, 128, (10, 7))
+    c = HW.mlp_cost([q1, q2], w_bits=8)
+    assert c.area_mm2 > 0 and c.power_mw > 0
+    assert c.n_multipliers == int((q1 != 0).sum() + (q2 != 0).sum())
+    # printed-scale sanity: tens of cm^2 for a whitewine-sized MLP
+    assert 500 < c.area_mm2 < 30000

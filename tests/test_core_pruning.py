@@ -1,0 +1,62 @@
+"""Unit + property tests for pruning (paper §II-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pruning as P
+
+
+def test_magnitude_mask_keeps_largest():
+    w = jnp.asarray([[0.1, -5.0], [0.01, 2.0]])
+    m = P.magnitude_mask(w, 0.5)
+    assert bool(m[0, 1]) and bool(m[1, 1])
+    assert not bool(m[0, 0]) and not bool(m[1, 0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(sparsity=st.floats(0.0, 0.85), seed=st.integers(0, 2 ** 16))
+def test_property_sparsity_achieved(sparsity, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (40, 25))
+    m = P.magnitude_mask(w, sparsity)
+    achieved = 1.0 - float(jnp.mean(m.astype(jnp.float32)))
+    assert abs(achieved - sparsity) < 0.02
+
+
+def test_masked_gradient_is_dead():
+    w = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+    m = P.magnitude_mask(w, 0.5)
+    g = jax.grad(lambda w: jnp.sum(P.apply_mask(w, m)))(w)
+    assert bool(jnp.all((np.asarray(g) != 0) == np.asarray(m)))
+
+
+def test_global_pruning_spares_small_leaves():
+    params = {"w1": jax.random.normal(jax.random.PRNGKey(0), (32, 32)),
+              "b": jnp.ones((4,))}
+    masks = P.global_magnitude_masks(params, 0.5)
+    assert bool(jnp.all(masks["b"]))
+    assert 0.4 < P.sparsity_of({"w1": masks["w1"]}) < 0.6
+
+
+def test_block_mask_structure():
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    m = P.block_mask(w, 0.5, block=(16, 16))
+    tiles = np.asarray(m).reshape(4, 16, 4, 16)
+    per_tile = tiles.all(axis=(1, 3)) | (~tiles.any(axis=(1, 3)))
+    assert per_tile.all(), "mask must be constant within each block"
+    assert abs(1.0 - m.mean() - 0.5) < 0.1
+
+
+def test_cubic_schedule_monotone():
+    vals = [P.cubic_schedule(s, begin=10, end=100, final=0.8)
+            for s in range(0, 120, 5)]
+    assert vals[0] == 0.0 and abs(vals[-1] - 0.8) < 1e-9
+    assert all(b >= a - 1e-9 for a, b in zip(vals, vals[1:]))
+
+
+def test_neuron_mask_columns():
+    w = jax.random.normal(jax.random.PRNGKey(2), (16, 10))
+    m = np.asarray(P.neuron_mask(w, 0.3))
+    col_const = np.all(m == m[0:1, :], axis=0)
+    assert col_const.all()
+    assert m[0].sum() == 7

@@ -1,0 +1,67 @@
+"""Unit + property tests for quantization (paper §II-A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as Q
+
+
+def test_roundtrip_exact_grid():
+    w = jnp.asarray([-1.0, -0.5, 0.0, 0.5, 1.0])
+    q, s = Q.quantize_int(w, Q.QuantConfig(bits=8))
+    np.testing.assert_allclose(np.asarray(Q.dequantize(q, s)), np.asarray(w),
+                               atol=1e-2)
+
+
+def test_levels_bounded():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    for bits in range(2, 9):
+        q, _ = Q.quantize_int(w, Q.QuantConfig(bits=bits))
+        nlevels = len(np.unique(np.asarray(q)))
+        assert nlevels <= 2 ** bits - 1
+        assert int(jnp.max(jnp.abs(q))) <= 2 ** (bits - 1) - 1
+
+
+def test_fake_quant_ste_gradient_is_identity():
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+    g = jax.grad(lambda w: jnp.sum(Q.fake_quant(w, Q.QuantConfig(bits=4))
+                                   * 3.0))(w)
+    np.testing.assert_allclose(np.asarray(g), 3.0 * np.ones((8, 8)), atol=1e-6)
+
+
+def test_error_monotone_in_bits():
+    w = jax.random.normal(jax.random.PRNGKey(2), (128, 128))
+    errs = [Q.quant_error(w, Q.QuantConfig(bits=b)) for b in range(2, 9)]
+    assert all(a >= b - 1e-6 for a, b in zip(errs, errs[1:])), errs
+
+
+def test_per_channel_not_worse():
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 32)) \
+        * jnp.linspace(0.1, 10.0, 32)[None, :]
+    e_t = Q.quant_error(w, Q.QuantConfig(bits=4, per_channel=False))
+    e_c = Q.quant_error(w, Q.QuantConfig(bits=4, per_channel=True))
+    assert e_c <= e_t
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 2 ** 16))
+def test_property_fake_quant_idempotent(bits, seed):
+    """fq(fq(w)) == fq(w): the grid is a fixpoint."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (16, 16))
+    qc = Q.QuantConfig(bits=bits)
+    w1 = Q.fake_quant(w, qc)
+    w2 = Q.fake_quant(w1, qc)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 2 ** 16))
+def test_property_quant_error_bounded(bits, seed):
+    """|w - deq(q)| <= scale/2 elementwise (uniform grid guarantee)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32,))
+    q, s = Q.quantize_int(w, Q.QuantConfig(bits=bits))
+    err = np.max(np.abs(np.asarray(w) - np.asarray(Q.dequantize(q, s))))
+    assert err <= float(s) / 2 + 1e-6

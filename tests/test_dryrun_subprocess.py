@@ -1,0 +1,51 @@
+"""End-to-end dry-run test in a subprocess (so the forced 512-device XLA flag
+never leaks into this test process)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess(tmp_path):
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen3-0.6b", "--shape", "decode_32k",
+         "--mesh", "both", "--out", str(tmp_path), "--force",
+         "--skip-reduced"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    for mesh in ("single", "multi"):
+        rec = json.loads(
+            (tmp_path / f"qwen3-0.6b__decode_32k__{mesh}.json").read_text())
+        assert rec["status"] == "ok"
+        assert rec["chips"] == (256 if mesh == "single" else 512)
+        assert rec["memory"]["argument_bytes"] > 0
+        assert rec["compile_s"] > 0
+
+
+def test_existing_artifacts_cover_all_cells():
+    """The committed sweep must cover every (arch x shape x mesh) cell with
+    ok or a documented skip."""
+    art = ROOT / "artifacts" / "dryrun"
+    if not art.exists() or len(list(art.glob("*.json"))) < 80:
+        pytest.skip("full sweep not complete yet")
+    from repro.configs import ARCHS, SHAPES, shape_applicable
+    for arch, cfg in ARCHS.items():
+        for shape_name, shape in SHAPES.items():
+            for mesh in ("single", "multi"):
+                f = art / f"{arch}__{shape_name}__{mesh}.json"
+                assert f.exists(), f.name
+                rec = json.loads(f.read_text())
+                ok, why = shape_applicable(cfg, shape)
+                if ok:
+                    assert rec["status"] == "ok", (f.name, rec.get("error"))
+                else:
+                    assert rec["status"] == "skipped"
+                    assert rec["reason"]

@@ -1,0 +1,183 @@
+"""Pallas kernel validation (interpret=True on CPU): shape/dtype sweeps
+against the pure-jnp oracles, plus semantic links back to repro.core."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clustering as C
+from repro.core import pruning as P
+from repro.core import quantization as Q
+from repro.kernels.block_sparse_matmul import (block_sparse_matmul,
+                                               block_sparse_matmul_ref)
+from repro.kernels.clustered_matmul import (clustered_matmul,
+                                            clustered_matmul_ref)
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.quant_matmul import quant_matmul, quant_matmul_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,K,N", [(32, 64, 32), (100, 200, 72),
+                                   (17, 130, 50)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_shapes_dtypes(M, K, N, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = jax.random.normal(k1, (M, K), dtype)
+    wq = jax.random.randint(k2, (K, N), -127, 128, jnp.int8)
+    s = (jnp.abs(jax.random.normal(k3, (N,))) + 0.1) * 0.01
+    y = quant_matmul(x, wq, s, block_m=32, block_n=32, block_k=64)
+    yr = quant_matmul_ref(x, wq, s)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quant_matmul_consistent_with_core_quantizer(bits):
+    """kernel(int weights from core.quantization) == x @ dequant(w)."""
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (48, 96), jnp.float32)
+    w = jax.random.normal(k2, (96, 64), jnp.float32)
+    q, scale = Q.quantize_int(w, Q.QuantConfig(bits=bits))
+    scales = jnp.full((64,), jnp.float32(scale))
+    y = quant_matmul(x, q.astype(jnp.int8), scales, block_m=16, block_n=32,
+                     block_k=32)
+    ref = x @ Q.dequantize(q, scale)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# clustered_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,K,N,C_", [(32, 64, 32, 4), (64, 128, 96, 16),
+                                      (20, 70, 40, 3)])
+def test_clustered_matmul_shapes(M, K, N, C_):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = jax.random.normal(k1, (M, K), jnp.float32)
+    idx = jax.random.randint(k2, (K, N), 0, C_, jnp.int32)
+    cb = jax.random.normal(k3, (K, C_), jnp.float32)
+    y = clustered_matmul(x, idx, cb, block_m=16, block_n=32, block_k=32)
+    yr = clustered_matmul_ref(x, idx, cb)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_clustered_matmul_consistent_with_core_clustering():
+    """kernel over core.clustering's per-input codebooks == dense matmul on
+    the reconstructed weights (the paper's multiplier-sharing semantics)."""
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (24, 32), jnp.float32)
+    w = jax.random.normal(k2, (32, 48), jnp.float32)
+    cb, idx = C.cluster_per_input(w, 6)
+    y = clustered_matmul(x, idx, cb, block_m=8, block_n=16, block_k=16)
+    ref = x @ C.reconstruct_per_input(cb, idx)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# block_sparse_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sparsity", [0.0, 0.4, 0.8])
+def test_block_sparse_matmul(sparsity):
+    k1, k2 = jax.random.split(KEY)
+    M, K, N, bk, bn = 32, 128, 96, 32, 32
+    x = jax.random.normal(k1, (M, K), jnp.float32)
+    w = jax.random.normal(k2, (K, N), jnp.float32)
+    full = P.block_mask(w, sparsity, block=(bk, bn))
+    bm = full[::bk, ::bn].astype(jnp.int32)
+    y = block_sparse_matmul(x, w, bm, block_m=16, block_n=bn, block_k=bk)
+    yr = block_sparse_matmul_ref(x, w, bm, block_k=bk, block_n=bn)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5,
+                               atol=1e-5)
+    # semantics match core.pruning.apply_mask
+    ref2 = x @ P.apply_mask(w, full)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref2), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,T,H,KV,hd", [(1, 64, 4, 4, 16), (2, 128, 4, 2, 32),
+                                         (1, 96, 8, 1, 16)])
+def test_flash_attention_causal(B, T, H, KV, hd):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, KV, hd), jnp.float32)
+    y = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    G = H // KV
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    kf = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, KV, G, T, hd)).reshape(B * H, T, hd)
+    vf = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, KV, G, T, hd)).reshape(B * H, T, hd)
+    yr = flash_attention_ref(qf, kf, vf, causal=True) \
+        .reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(KEY, 3)
+    B, T, H, hd = 1, 128, 2, 16
+    q = jax.random.normal(ks[0], (B, T, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, H, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, H, hd), jnp.float32)
+    y = flash_attention(q, k, v, causal=True, window=window, block_q=32,
+                        block_k=32)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    yr = flash_attention_ref(qf, kf, vf, causal=True, window=window) \
+        .reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_flash_attention_softcap_matches_model_attention():
+    """Kernel agrees with the model's attend() (gemma2-style softcap)."""
+    from repro.nn.attention import attend
+    ks = jax.random.split(KEY, 3)
+    B, T, H, hd = 1, 64, 2, 16
+    q = jax.random.normal(ks[0], (B, T, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, H, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, H, hd), jnp.float32)
+    y = flash_attention(q, k, v, causal=True, softcap=50.0, block_q=32,
+                        block_k=32)
+    yr = attend(q, k, v, causal=True, softcap=50.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(KEY, 3)
+    B, T, H, hd = 1, 64, 2, 32
+    q = jax.random.normal(ks[0], (B, T, H, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, T, H, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, T, H, hd), jnp.bfloat16)
+    y = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    yr = flash_attention_ref(qf, kf, vf, causal=True) \
+        .reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), rtol=3e-2,
+                               atol=3e-2)

@@ -1,0 +1,83 @@
+"""Roofline analysis unit tests: HLO collective parsing, affine depth fit,
+term arithmetic."""
+import numpy as np
+import pytest
+
+from repro.roofline import analysis as RA
+from repro.roofline.hw import TPU_V5E
+
+
+HLO = """
+ENTRY main {
+  %p = bf16[16,4096,1152]{2,1,0} parameter(0)
+  %ag = bf16[16,4096,18432]{2,1,0} all-gather(%p), dimensions={2}
+  %ar.1 = f32[256,1024]{1,0} all-reduce-start(f32[256,1024]{1,0} %x)
+  %ar.1d = f32[256,1024]{1,0} all-reduce-done(%ar.1)
+  %rs = f32[64,512]{1,0} reduce-scatter(%y), dimensions={0}
+  %cp = u8[1024]{0} collective-permute(%z)
+}
+"""
+
+
+def test_collective_parsing_kinds_and_bytes():
+    out = RA.collective_bytes(HLO)
+    ag = 16 * 4096 * 18432 * 2
+    ar = 256 * 1024 * 4 * 2.0            # wire factor 2 for all-reduce
+    rs = 64 * 512 * 4
+    cp = 1024
+    assert out["all-gather"] == ag
+    assert out["all-reduce"] == ar       # -start counted once, -done ignored
+    assert out["reduce-scatter"] == rs
+    assert out["collective-permute"] == cp
+    assert out["total"] == ag + ar + rs + cp
+
+
+def test_affine_depth_fit_exact():
+    """cost(R) = 7 + 3*R0 + 11*R1 must be recovered exactly."""
+    def measure(r):
+        return {"flops": 7.0 + 3.0 * r[0] + 11.0 * r[1]}
+    fit = RA.fit_depth(measure, 2)
+    assert fit.base["flops"] == pytest.approx(7.0)
+    assert fit.bodies[0]["flops"] == pytest.approx(3.0)
+    assert fit.bodies[1]["flops"] == pytest.approx(11.0)
+    assert fit.at([96, 4])["flops"] == pytest.approx(7 + 3 * 96 + 11 * 4)
+
+
+def test_roofline_terms_and_dominant():
+    r = RA.Roofline(flops_per_chip=197e12, bytes_per_chip=819e9 * 2,
+                    coll_bytes_per_chip=50e9 * 0.5)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.dominant == "memory"
+    assert r.t_step == pytest.approx(2.0)
+    assert r.t_serial == pytest.approx(3.5)
+
+
+def test_model_flops():
+    assert RA.model_flops(1e9, 1000, "train") == 6e12
+    assert RA.model_flops(1e9, 1000, "serve") == 2e12
+
+
+def test_dryrun_artifacts_consistent():
+    """Every recorded single-pod cell: terms recompute from raw fields."""
+    import glob
+    import json
+    files = glob.glob("artifacts/dryrun/*__single.json")
+    if not files:
+        pytest.skip("dry-run artifacts not generated yet")
+    checked = 0
+    for f in files:
+        r = json.load(open(f))
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        ro = r["roofline"]
+        assert ro["t_compute_s"] == pytest.approx(
+            ro["flops_per_chip"] / TPU_V5E.peak_flops)
+        assert ro["t_memory_s"] == pytest.approx(
+            ro["bytes_per_chip"] / TPU_V5E.hbm_bw)
+        assert ro["t_step_s"] == pytest.approx(
+            max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"]))
+        assert ro["dominant"] in ("compute", "memory", "collective")
+        checked += 1
+    assert checked >= 10

@@ -1,0 +1,67 @@
+"""Serving engine tests: lifecycle, continuous waves, enc-dec context."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.nn import transformer as T
+from repro.serve.engine import Request, ServeEngine
+
+
+def _engine(name="qwen3-0.6b", batch=2, max_len=32):
+    cfg = ARCHS[name].reduced(vocab_size=64)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    return ServeEngine(params, cfg, batch=batch, max_len=max_len), cfg
+
+
+def test_requests_complete_with_outputs():
+    eng, cfg = _engine()
+    reqs = [Request(rid=i, prompt=[1 + i, 2, 3], max_new_tokens=4)
+            for i in range(5)]
+    out = eng.run(reqs)
+    assert all(r.done for r in out)
+    assert all(len(r.output) == 4 for r in out)
+    assert all(0 <= t < cfg.vocab_size for r in out for t in r.output)
+    assert eng.stats.requests_completed == 5
+    assert eng.stats.tokens_generated == 20
+
+
+def test_greedy_decode_is_deterministic():
+    eng1, _ = _engine()
+    eng2, _ = _engine()
+    r1 = eng1.run([Request(0, [5, 6, 7], max_new_tokens=6)])[0]
+    r2 = eng2.run([Request(0, [5, 6, 7], max_new_tokens=6)])[0]
+    assert r1.output == r2.output
+
+
+def test_eos_stops_generation():
+    eng, cfg = _engine()
+    probe = eng.run([Request(0, [3, 4], max_new_tokens=8)])[0]
+    eos = probe.output[1] if len(probe.output) > 1 else probe.output[0]
+    eng2, _ = _engine()
+    r = eng2.run([Request(0, [3, 4], max_new_tokens=8, eos_id=eos)])[0]
+    assert r.done
+    assert len(r.output) <= len(probe.output)
+
+
+def test_hybrid_arch_serving():
+    eng, _ = _engine("recurrentgemma-9b")
+    out = eng.run([Request(0, [1, 2], max_new_tokens=3)])
+    assert len(out[0].output) == 3
+
+
+def test_ssm_arch_serving():
+    eng, _ = _engine("falcon-mamba-7b")
+    out = eng.run([Request(0, [1, 2, 3, 4], max_new_tokens=3)])
+    assert len(out[0].output) == 3
+
+
+def test_encdec_serving_with_context():
+    cfg = ARCHS["whisper-base"].reduced(vocab_size=64)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, batch=2, max_len=32)
+    frames = jax.random.normal(
+        jax.random.PRNGKey(1), (2, cfg.encoder.num_frames, cfg.d_model))
+    enc_out = T._encoder_forward(params["encoder"], frames, cfg, remat=False)
+    out = eng.run([Request(0, [1], max_new_tokens=3)], enc_out=enc_out)
+    assert len(out[0].output) == 3
