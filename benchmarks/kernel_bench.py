@@ -78,6 +78,29 @@ def interpret_sanity():
     return (time.time() - t0) / 3 * 1e6
 
 
+def hw_pricing_bench(population: int = 64, reps: int = 20):
+    """Printed-area pricing throughput: the GA's cost callback. Compares the
+    retired scalar path (np.vectorize CSD per coefficient) against the
+    vectorized bit-twiddling + one-call population pricing (hw_model)."""
+    from repro.core import hw_model as HW
+    rng = np.random.default_rng(0)
+    q1 = rng.integers(-127, 128, (population, 11, 10))
+    q2 = rng.integers(-127, 128, (population, 10, 7))
+
+    t0 = time.time()
+    for _ in range(reps):
+        csd = np.vectorize(HW.csd_nonzero_digits, otypes=[np.int64])
+        for p in range(population):
+            csd(q1[p]), csd(q2[p])
+    t_scalar = (time.time() - t0) / reps
+
+    t0 = time.time()
+    for _ in range(reps):
+        HW.mlp_cost_batch([q1, q2], w_bits=[np.full(population, 8)] * 2)
+    t_vec = (time.time() - t0) / reps
+    return t_scalar, t_vec
+
+
 def main(fast: bool = False):
     rows = run()
     print("kernel_bench (derived v5e roofline, decode-shaped workloads)")
@@ -89,6 +112,10 @@ def main(fast: bool = False):
     us = interpret_sanity()
     print(f"interpret-mode sanity: quant_matmul {us:.0f} us/call (CPU, "
           f"correctness path only)")
+    t_scalar, t_vec = hw_pricing_bench()
+    print(f"printed-area pricing, population=64: scalar CSD "
+          f"{t_scalar*1e3:.1f} ms -> vectorized {t_vec*1e3:.2f} ms "
+          f"({t_scalar/t_vec:.0f}x)")
     return rows
 
 

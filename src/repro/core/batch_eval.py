@@ -1,0 +1,348 @@
+"""Batched population evaluation — the GA's hot path, one jit instead of N.
+
+`run_nsga2` spends essentially all of its time in per-candidate QAT
+finetuning: the serial path traces and compiles a fresh `jax.jit` train
+loop for every spec. This module stacks a whole population's genomes into
+padded per-layer arrays (bits, cluster counts, pruning masks), and runs the
+QAT finetune for all candidates in a single `jax.vmap`-over-`lax.scan`
+jitted call against the shared pretrained weights. Compiled circuits are
+then priced for the whole population at once through the vectorized
+`hw_model.mlp_cost_batch`.
+
+The dynamic (traced) spec transforms are written to match the serial
+static-spec path operation-for-operation:
+
+* quantization: integer `qmax` built by bit-shift (no float pow), same
+  scale/round/clip sequence as `quantization.fake_quant`;
+* clustering: padded Lloyd k-means over `K_MAX` slots with invalid slots
+  masked to +inf distance — identical quantile init, identical argmin
+  tie-breaking, so valid-slot centroids equal `clustering._kmeans_1d`'s;
+* "off" genes (bits=None / clusters=None / sparsity=0) select the identity
+  branch through `jnp.where`, multiplying by an all-ones mask.
+
+A persistent on-disk `EvalCache` keyed by (dataset, seed, epochs,
+spec.to_json()) makes resumed searches and repeated sweeps free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.printed_mlp import PrintedMLPConfig
+from repro.core import hw_model as HW
+from repro.core import minimize as MZ
+from repro.core.compression_spec import ModelMin
+
+# Padded k-means slot count: must cover every cluster count the GA can emit
+# (core.ga.CLUSTER_CHOICES tops out at 16).
+K_MAX = 16
+
+
+# ---------------------------------------------------------------------------
+# dynamic-spec transforms (traced bits / cluster counts)
+# ---------------------------------------------------------------------------
+
+
+def _padded_kmeans_1d(x: jnp.ndarray, k: jnp.ndarray, k_max: int,
+                      iters: int = 25):
+    """`clustering._kmeans_1d` with a *traced* cluster count.
+
+    Runs Lloyd iterations over `k_max` centroid slots; slots >= k are held
+    at +inf distance so assignments, counts and centroid updates of the
+    valid slots reproduce the static-k path exactly (same quantile init,
+    same first-index argmin tie-breaking).
+    """
+    kf = k.astype(jnp.float32)
+    slots = jnp.arange(k_max, dtype=jnp.float32)
+    valid = slots < kf                                    # (k_max,)
+    qs = jnp.clip((slots + 0.5) / kf, 0.0, 1.0)
+    cent = jnp.quantile(x, qs)
+
+    def step(cent, _):
+        d = jnp.abs(x[:, None] - cent[None, :])           # (N, k_max)
+        d = jnp.where(valid[None, :], d, jnp.inf)
+        a = jnp.argmin(d, axis=1)
+        one = jax.nn.one_hot(a, k_max, dtype=jnp.float32)
+        cnt = one.sum(0)
+        s = (one * x[:, None]).sum(0)
+        new = jnp.where(cnt > 0, s / jnp.maximum(cnt, 1), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    d = jnp.abs(x[:, None] - cent[None, :])
+    d = jnp.where(valid[None, :], d, jnp.inf)
+    a = jnp.argmin(d, axis=1).astype(jnp.int32)
+    return cent, a
+
+
+def _cluster_dyn(w: jnp.ndarray, k: jnp.ndarray, k_max: int = K_MAX):
+    """Per-input cluster STE with traced k; k == 0 -> identity."""
+    wd = jax.lax.stop_gradient(w)
+    keff = jnp.maximum(k, 1)
+    cent, idx = jax.vmap(
+        lambda row: _padded_kmeans_1d(row, keff, k_max))(wd)
+    wq = jnp.take_along_axis(cent, idx, axis=1)
+    return w + jnp.where(k > 0, wq - wd, 0.0)
+
+
+def _quant_dyn(w: jnp.ndarray, bits: jnp.ndarray):
+    """Symmetric per-tensor fake-quant STE with traced bits; 0 -> identity.
+    qmax is built by integer shift so traced bits give the exact same grid
+    as `quantization.fake_quant`'s static python-float 2**(b-1)-1."""
+    wd = jax.lax.stop_gradient(w)
+    beff = jnp.maximum(bits, 2)
+    qmax = ((jnp.left_shift(jnp.int32(1), beff - 1)) - 1).astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(wd)), 1e-8)
+    scale = amax / qmax
+    fq = jnp.clip(jnp.round(wd / scale), -qmax, qmax) * scale
+    return w + jnp.where(bits > 0, fq - wd, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# population stacking
+# ---------------------------------------------------------------------------
+
+
+def stack_specs(specs: Sequence[ModelMin]) -> Tuple[np.ndarray, np.ndarray]:
+    """-> (bits (P, L) int32, clusters (P, L) int32); 0 encodes "off"."""
+    bits = np.array([[l.bits or 0 for l in s.layers] for s in specs],
+                    np.int32)
+    ks = np.array([[l.clusters or 0 for l in s.layers] for s in specs],
+                  np.int32)
+    return bits, ks
+
+
+def stack_masks(params0, specs: Sequence[ModelMin]):
+    """Magnitude masks from the shared pretrained weights, in both layouts
+    the engine needs, from ONE memoized computation per distinct
+    (layer, sparsity):
+
+    -> (stacked: per layer (P, d_in, d_out) float32 for the vmapped
+        finetune (all-ones when a gene's sparsity is 0),
+        serial: per spec, per layer bool mask or None — the exact
+        convention `compile_bespoke` / `make_masks` use).
+    """
+    memo: Dict[Tuple[int, float], Optional[np.ndarray]] = {}
+
+    def mask_for(i, layer, sparsity):
+        key = (i, float(sparsity))
+        if key not in memo:
+            memo[key] = (np.asarray(MZ.P.magnitude_mask(layer["w"],
+                                                        sparsity), bool)
+                         if sparsity > 0 else None)
+        return memo[key]
+
+    layers = params0["layers"]
+    serial = [[mask_for(i, layers[i], s.layers[i].sparsity)
+               for i in range(len(layers))] for s in specs]
+    stacked = [np.stack([np.ones(layers[i]["w"].shape, np.float32)
+                         if row[i] is None else row[i].astype(np.float32)
+                         for row in serial])
+               for i in range(len(layers))]
+    return stacked, serial
+
+
+# ---------------------------------------------------------------------------
+# the batched QAT finetune (one jit for the whole population)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("epochs", "lr", "k_max"))
+def _population_finetune(params0, bits, ks, masks, x, y, *,
+                         epochs: int, lr: float, k_max: int = K_MAX):
+    """QAT-finetune P candidates in one vmapped lax.scan train loop.
+
+    params0: shared pretrained pytree; bits/ks: (P, L) int32; masks: tuple
+    of L arrays (P, d_in_i, d_out_i) float32. Returns the trained params
+    pytree with a leading population axis on every leaf.
+    """
+    def train_one(bits_row, ks_row, masks_row):
+        def t(i, w):
+            w = w * masks_row[i]
+            w = _cluster_dyn(w, ks_row[i], k_max)
+            return _quant_dyn(w, bits_row[i])
+        return MZ._train(params0, x, y, epochs=epochs, lr=lr, w_transform=t)
+
+    return jax.vmap(train_one, in_axes=(0, 0, 0))(bits, ks, masks)
+
+
+# ---------------------------------------------------------------------------
+# persistent evaluation cache
+# ---------------------------------------------------------------------------
+
+
+class EvalCache:
+    """Append-only on-disk cache of spec evaluations.
+
+    One JSON file, atomically replaced on flush; keys are
+    "dataset|seed|epochs|spec.to_json()" so resumed searches, repeated
+    sweeps and the serial/batched paths all share results.
+    """
+
+    def __init__(self, path):
+        self.path = Path(path)
+        self._data: Dict[str, Dict] = {}
+        if self.path.exists():
+            try:
+                self._data = json.loads(self.path.read_text())
+            except (json.JSONDecodeError, OSError) as e:
+                # a damaged cache must not kill a long search — start
+                # empty; the next flush atomically replaces the file
+                import warnings
+                warnings.warn(f"EvalCache {self.path} unreadable ({e}); "
+                              "starting empty")
+
+    @staticmethod
+    def key(dataset: str, seed: int, epochs: int, spec: ModelMin) -> str:
+        return f"{dataset}|seed={seed}|epochs={epochs}|{spec.to_json()}"
+
+    def __len__(self):
+        return len(self._data)
+
+    def get(self, dataset: str, seed: int, epochs: int,
+            spec: ModelMin) -> Optional[MZ.EvalResult]:
+        d = self._data.get(self.key(dataset, seed, epochs, spec))
+        if d is None:
+            return None
+        return MZ.EvalResult(ModelMin.from_json(d["spec"]), d["accuracy"],
+                             d["area_mm2"], d["power_mw"],
+                             d["n_multipliers"])
+
+    def put(self, dataset: str, seed: int, epochs: int,
+            r: MZ.EvalResult) -> None:
+        self._data[self.key(dataset, seed, epochs, r.spec)] = {
+            "spec": r.spec.to_json(), "accuracy": float(r.accuracy),
+            "area_mm2": float(r.area_mm2), "power_mw": float(r.power_mw),
+            "n_multipliers": int(r.n_multipliers)}
+
+    def flush(self) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name + ".")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._data, f)
+            os.replace(tmp, self.path)        # atomic publish
+        except BaseException:
+            os.unlink(tmp)
+            raise
+
+
+# ---------------------------------------------------------------------------
+# population evaluation
+# ---------------------------------------------------------------------------
+
+
+def _compile_and_price(params_pop, specs, masks_serial, xte,
+                       yte) -> List[MZ.EvalResult]:
+    """Host-side bespoke compile per candidate + one vectorized pricing
+    call for the whole population."""
+    compiled = []
+    for p, spec in enumerate(specs):
+        params_p = jax.tree_util.tree_map(lambda a: a[p], params_pop)
+        compiled.append(MZ.compile_bespoke(params_p, spec, masks_serial[p]))
+
+    # accuracy of the exact bespoke arithmetic, per candidate (cheap numpy)
+    accs = [MZ.compiled_accuracy(c, xte, yte) for c in compiled]
+
+    # stack per-layer integer weights / codebooks and price the whole
+    # population in one hw_model call (pad codebooks to the layer's max k)
+    L = len(compiled[0].q_layers)
+    q_layers, w_bits, clusters = [], [], []
+    for i in range(L):
+        q_layers.append(np.stack([c.q_layers[i] for c in compiled]))
+        w_bits.append(np.array([c.w_bits[i] for c in compiled], np.int64))
+        has = np.array([c.clusters[i] is not None for c in compiled])
+        if has.any():
+            kmax = max(c.clusters[i][1].shape[1]
+                       for c in compiled if c.clusters[i] is not None)
+            d_in, d_out = compiled[0].q_layers[i].shape
+            idx = np.zeros((len(compiled), d_in, d_out), np.int64)
+            cb = np.zeros((len(compiled), d_in, kmax), np.int64)
+            for p, c in enumerate(compiled):
+                if c.clusters[i] is not None:
+                    ci, cc = c.clusters[i]
+                    idx[p] = ci
+                    cb[p, :, :cc.shape[1]] = cc
+            clusters.append((idx, cb, has))
+        else:
+            clusters.append(None)
+    in_bits = np.array([c.input_bits for c in compiled], np.int64)
+    cost = HW.mlp_cost_batch(q_layers, w_bits=w_bits, in_bits=in_bits,
+                             clusters=clusters)
+
+    return [MZ.EvalResult(spec, accs[p], float(cost["area_mm2"][p]),
+                          float(cost["power_mw"][p]),
+                          int(cost["n_multipliers"][p]))
+            for p, spec in enumerate(specs)]
+
+
+def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
+                        epochs: int = 150, seed: int = 0,
+                        cache: Optional[EvalCache] = None
+                        ) -> List[MZ.EvalResult]:
+    """Evaluate a population of specs with ONE vmapped QAT finetune + ONE
+    vectorized pricing pass. Order-preserving; duplicates and cache hits
+    are evaluated once. Drop-in for `[evaluate_spec(cfg, s) for s in specs]`.
+    """
+    specs = list(specs)
+    results: Dict[str, MZ.EvalResult] = {}
+    todo: List[ModelMin] = []
+    queued = set()
+    for s in specs:
+        k = s.to_json()
+        if k in results or k in queued:
+            continue
+        hit = cache.get(cfg.name, seed, epochs, s) if cache else None
+        if hit is not None:
+            results[k] = hit
+        else:
+            todo.append(s)
+            queued.add(k)
+
+    if todo:
+        n_real = len(todo)
+        # pad to a power-of-two bucket by repeating the last spec: the jit
+        # specializes on the population axis, and a GA's uncached count
+        # differs almost every generation — bucketing keeps one compiled
+        # executable per bucket instead of a retrace per generation
+        bucket = 1 << (n_real - 1).bit_length()
+        padded = todo + [todo[-1]] * (bucket - n_real)
+        params0, (xtr, ytr, xte, yte) = MZ.pretrain(cfg, seed=seed)
+        bits, ks = stack_specs(padded)
+        stacked, masks_serial = stack_masks(params0, padded)
+        masks = tuple(jnp.asarray(m) for m in stacked)
+        trained = _population_finetune(
+            params0, jnp.asarray(bits), jnp.asarray(ks), masks,
+            jnp.asarray(xtr), jnp.asarray(ytr), epochs=epochs, lr=2e-3)
+        trained = jax.tree_util.tree_map(lambda a: a[:n_real], trained)
+        for r in _compile_and_price(trained, todo, masks_serial[:n_real],
+                                    xte, yte):
+            results[r.spec.to_json()] = r
+            if cache is not None:
+                cache.put(cfg.name, seed, epochs, r)
+        if cache is not None:
+            cache.flush()
+
+    return [results[s.to_json()] for s in specs]
+
+
+def make_batch_evaluator(cfg: PrintedMLPConfig, *, epochs: int = 150,
+                         seed: int = 0,
+                         cache: Optional[EvalCache] = None):
+    """GA adapter: List[ModelMin] -> List[(1 - accuracy, area_mm2)].
+    Plug into `run_nsga2(..., batch_evaluate=...)`."""
+    def batch_evaluate(specs: Sequence[ModelMin]):
+        rs = evaluate_population(cfg, specs, epochs=epochs, seed=seed,
+                                 cache=cache)
+        return [(1.0 - r.accuracy, r.area_mm2) for r in rs]
+    return batch_evaluate

@@ -29,6 +29,7 @@ class GAConfig:
     crossover_prob: float = 0.9
     mutation_prob: float = 0.25
     seed: int = 0
+    input_bits: int = 8                  # propagated into random genomes
     bits_choices: Sequence = BITS_CHOICES
     sparsity_choices: Sequence = SPARSITY_CHOICES
     cluster_choices: Sequence = CLUSTER_CHOICES
@@ -76,28 +77,51 @@ def _tournament(idx_ranked: List[int], rng) -> int:
 
 
 def run_nsga2(n_layers: int,
-              evaluate: Callable[[ModelMin], Tuple[float, float]],
+              evaluate: Optional[Callable[[ModelMin], Tuple[float, float]]],
               cfg: GAConfig = GAConfig(),
-              seed_specs: Optional[List[ModelMin]] = None) -> GAResult:
+              seed_specs: Optional[List[ModelMin]] = None, *,
+              batch_evaluate: Optional[
+                  Callable[[List[ModelMin]], List[Tuple[float, float]]]]
+              = None) -> GAResult:
     """evaluate(spec) -> (obj1, obj2), both minimized. Deterministic for a
-    fixed GAConfig.seed. Memoizes repeated specs."""
+    fixed GAConfig.seed. Memoizes repeated specs.
+
+    When `batch_evaluate` is given (e.g. `batch_eval.make_batch_evaluator`),
+    every generation's uncached specs are fitted in ONE call — the batched
+    engine runs the whole population's QAT finetune in a single jit instead
+    of N sequential traces.
+    """
+    if evaluate is None and batch_evaluate is None:
+        raise ValueError("need evaluate or batch_evaluate")
     rng = random.Random(cfg.seed)
     cache: Dict[str, Tuple[float, float]] = {}
 
-    def fit(spec: ModelMin) -> Tuple[float, float]:
-        key = spec.to_json()
-        if key not in cache:
-            cache[key] = tuple(map(float, evaluate(spec)))
-        return cache[key]
+    def fit_all(specs: List[ModelMin]) -> np.ndarray:
+        todo, seen = [], set()
+        for s in specs:
+            k = s.to_json()
+            if k not in cache and k not in seen:
+                todo.append(s)
+                seen.add(k)
+        if todo:
+            if batch_evaluate is not None:
+                outs = batch_evaluate(todo)
+            else:
+                outs = [evaluate(s) for s in todo]
+            for s, o in zip(todo, outs):
+                cache[s.to_json()] = tuple(map(float, o))
+        return np.array([cache[s.to_json()] for s in specs])
 
+    # propagate input_bits into random genomes: seed specs win, else config
+    input_bits = seed_specs[0].input_bits if seed_specs else cfg.input_bits
     pop: List[ModelMin] = list(seed_specs or [])
     while len(pop) < cfg.population:
         pop.append(ModelMin(tuple(_random_gene(rng, cfg)
-                                  for _ in range(n_layers))))
+                                  for _ in range(n_layers)), input_bits))
     history = []
 
     for gen in range(cfg.generations):
-        objs = np.array([fit(s) for s in pop])
+        objs = fit_all(pop)
         fronts = non_dominated_sort(objs)
         # rank ordering with crowding tiebreak
         ranked: List[int] = []
@@ -120,7 +144,7 @@ def run_nsga2(n_layers: int,
             children.append(_mutate(child, rng, cfg))
         # mu + lambda environmental selection
         union = pop + children
-        uobjs = np.array([fit(s) for s in union])
+        uobjs = fit_all(union)
         ufronts = non_dominated_sort(uobjs)
         new_pop: List[ModelMin] = []
         for f in ufronts:
@@ -136,5 +160,5 @@ def run_nsga2(n_layers: int,
                 break
         pop = new_pop
 
-    objs = np.array([fit(s) for s in pop])
+    objs = fit_all(pop)
     return GAResult(pop, objs, history, cache)

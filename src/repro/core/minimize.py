@@ -212,6 +212,18 @@ def evaluate_spec(cfg: PrintedMLPConfig, spec: ModelMin, *,
                       cost.n_multipliers)
 
 
+def evaluate_specs(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
+                   epochs: int = 150, seed: int = 0,
+                   cache=None) -> List[EvalResult]:
+    """Batched counterpart of `evaluate_spec`: the whole list is QAT-
+    finetuned in one vmapped jit and priced in one vectorized hw_model
+    call (see `core.batch_eval`). `cache` is an optional
+    `batch_eval.EvalCache` for cross-run persistence."""
+    from repro.core import batch_eval as BE      # lazy: avoids import cycle
+    return BE.evaluate_population(cfg, specs, epochs=epochs, seed=seed,
+                                  cache=cache)
+
+
 def baseline(cfg: PrintedMLPConfig, *, seed: int = 0) -> EvalResult:
     """MICRO'20 un-minimized bespoke MLP: dense 8-bit fixed point."""
     n = len(cfg.layer_dims) - 1

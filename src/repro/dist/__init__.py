@@ -1,0 +1,7 @@
+"""Distributed-training substrate: sharding rules, compressed gradient
+all-reduce, and fault-tolerance helpers.
+
+Everything here is mesh-shape agnostic — rules resolve on abstract shapes
+(ShapeDtypeStructs against an ``AbstractMesh``), so they are unit-testable
+without devices and reusable from 1 chip to a pod.
+"""

@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim for the property-based test modules.
+
+When `hypothesis` is installed (requirements-dev.txt) this re-exports the
+real `given` / `settings` / `strategies`, so property tests run at full
+strength. On a bare interpreter the shim degrades each @given test into a
+single cleanly-skipped test (with an install hint) instead of killing
+collection of the whole module — the plain unit tests in those modules
+keep running either way.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    _REASON = ("hypothesis not installed — property-based tests skipped "
+               "(pip install -r requirements-dev.txt to run them)")
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipper():
+                pytest.skip(_REASON)
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategy:
+        """Inert placeholder: strategy constructors only need to exist."""
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategy()

@@ -11,6 +11,18 @@ import numpy as np
 import pytest
 
 
+def pytest_report_header(config):
+    """Tier-1 must collect on a bare interpreter: property-based modules
+    import hypothesis through tests/_hypothesis_compat.py, which downgrades
+    @given tests to clean skips when it is absent."""
+    try:
+        import hypothesis
+        return f"hypothesis: {hypothesis.__version__} (property tests active)"
+    except ImportError:
+        return ("hypothesis: NOT INSTALLED — property-based tests will be "
+                "skipped (pip install -r requirements-dev.txt)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,169 @@
+"""Batched population engine: equivalence with the serial path, vectorized
+CSD pricing, and the persistent evaluation cache."""
+import numpy as np
+import pytest
+
+from repro.configs.printed_mlp import PRINTED_MLPS
+from repro.core import batch_eval as BE
+from repro.core import hw_model as HW
+from repro.core import minimize as MZ
+from repro.core.compression_spec import LayerMin, ModelMin
+
+CFG = PRINTED_MLPS["seeds"]          # smallest dataset: fastest finetunes
+N_LAYERS = len(CFG.layer_dims) - 1
+
+# a deliberately heterogeneous population: off/on per technique, mixed
+# bits/sparsity/cluster counts, including the all-off baseline gene
+SPECS = [
+    ModelMin.uniform(N_LAYERS, bits=8),
+    ModelMin.uniform(N_LAYERS, bits=3),
+    ModelMin.uniform(N_LAYERS, bits=6, sparsity=0.4),
+    ModelMin.uniform(N_LAYERS, bits=4, sparsity=0.3, clusters=4),
+    ModelMin((LayerMin(2, 0.5, 2), LayerMin(8, 0.0, 16)), 8),
+    ModelMin((LayerMin(5, 0.0, 3), LayerMin(4, 0.2, None)), 8),
+]
+
+
+# ---------------------------------------------------------------------------
+# vectorized CSD / pricing
+# ---------------------------------------------------------------------------
+
+
+def test_csd_vec_matches_scalar_for_all_int8():
+    coeffs = np.arange(-128, 128)
+    vec = HW.csd_nonzero_digits_vec(coeffs)
+    ref = np.array([HW.csd_nonzero_digits(int(c)) for c in coeffs])
+    np.testing.assert_array_equal(vec, ref)
+
+
+def test_csd_vec_wide_range_and_shapes():
+    rng = np.random.default_rng(0)
+    q = rng.integers(-(2 ** 15), 2 ** 15, (7, 11, 13))
+    vec = HW.csd_nonzero_digits_vec(q)
+    ref = np.array([HW.csd_nonzero_digits(int(c)) for c in q.reshape(-1)])
+    np.testing.assert_array_equal(vec.reshape(-1), ref)
+
+
+def test_mlp_cost_batch_matches_scalar_per_candidate():
+    rng = np.random.default_rng(1)
+    P_ = 5
+    qs, bits, cls = [], [], []
+    for (din, dout) in [(7, 8), (8, 3)]:
+        q = rng.integers(-127, 128, (P_, din, dout))
+        q[rng.random(q.shape) < 0.35] = 0
+        idx = rng.integers(0, 4, (P_, din, dout))
+        cb = rng.integers(-127, 128, (P_, din, 4))
+        has = np.array([True, False, True, False, True])
+        qs.append(q)
+        bits.append(rng.integers(2, 9, P_))
+        cls.append((idx, cb, has))
+    batch = HW.mlp_cost_batch(qs, w_bits=bits, clusters=cls)
+    for p in range(P_):
+        clp = [(cls[i][0][p], cls[i][1][p]) if cls[i][2][p] else None
+               for i in range(2)]
+        ref = HW.mlp_cost([q[p] for q in qs],
+                          w_bits=[int(b[p]) for b in bits], clusters=clp)
+        assert batch["total_fa"][p] == ref.total_fa
+        assert batch["n_multipliers"][p] == ref.n_multipliers
+        assert batch["area_mm2"][p] == ref.area_mm2
+
+
+# ---------------------------------------------------------------------------
+# batched vs serial evaluation (the tentpole equivalence)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def serial_and_batched():
+    serial = [MZ.evaluate_spec(CFG, s, epochs=30) for s in SPECS]
+    batched = BE.evaluate_population(CFG, SPECS, epochs=30)
+    return serial, batched
+
+
+def test_batched_objectives_match_serial(serial_and_batched):
+    serial, batched = serial_and_batched
+    for s, b in zip(serial, batched):
+        assert abs(s.accuracy - b.accuracy) <= 1e-3, s.spec
+        assert abs(s.area_mm2 - b.area_mm2) <= 1e-3 * max(s.area_mm2, 1.0)
+        assert s.n_multipliers == b.n_multipliers, s.spec
+        assert abs(s.power_mw - b.power_mw) <= 1e-3 * max(s.power_mw, 1.0)
+
+
+def test_batched_prices_mixed_input_bits_per_candidate():
+    """Regression: a population mixing input_bits must price each candidate
+    at its own input width (prod_width = in_bits + w_bits drives every cost
+    term), matching serial evaluate_spec."""
+    mixed = [ModelMin.uniform(N_LAYERS, bits=4, input_bits=4),
+             ModelMin.uniform(N_LAYERS, bits=4, input_bits=8)]
+    serial = [MZ.evaluate_spec(CFG, s, epochs=10) for s in mixed]
+    batched = BE.evaluate_population(CFG, mixed, epochs=10)
+    for s, b in zip(serial, batched):
+        assert s.area_mm2 == b.area_mm2, s.spec
+        assert s.power_mw == b.power_mw, s.spec
+        assert abs(s.accuracy - b.accuracy) <= 1e-3, s.spec
+
+
+def test_batched_preserves_order_and_dedups(serial_and_batched):
+    _, batched = serial_and_batched
+    # duplicated spec evaluates once but appears at both positions
+    dup = [SPECS[1], SPECS[0], SPECS[1]]
+    out = BE.evaluate_population(CFG, dup, epochs=30)
+    assert [r.spec for r in out] == dup
+    assert out[0].accuracy == out[2].accuracy
+
+
+def test_padded_kmeans_matches_static_k():
+    """Valid-slot centroids/assignments of the padded dynamic-k k-means
+    equal clustering's static-k path (the equivalence the engine rests on)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import clustering as C
+    x = jax.random.normal(jax.random.PRNGKey(3), (40,))
+    # every k the GA can emit (CLUSTER_CHOICES starts at 2; 0 bypasses the
+    # cluster transform entirely, 1 never occurs)
+    for k in (2, 3, 5, 8, 16):
+        cent_ref, a_ref = C._kmeans_1d(x, k)
+        cent, a = BE._padded_kmeans_1d(x, jnp.int32(k), BE.K_MAX)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(a_ref))
+        np.testing.assert_allclose(np.asarray(cent[:k]),
+                                   np.asarray(cent_ref), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# persistent cache
+# ---------------------------------------------------------------------------
+
+
+def test_eval_cache_roundtrip(tmp_path):
+    cache = BE.EvalCache(tmp_path / "evals.json")
+    r = MZ.EvalResult(SPECS[3], 0.912, 1234.5, 6.7, 89)
+    cache.put(CFG.name, 0, 30, r)
+    cache.flush()
+
+    fresh = BE.EvalCache(tmp_path / "evals.json")   # re-read from disk
+    assert len(fresh) == 1
+    hit = fresh.get(CFG.name, 0, 30, SPECS[3])
+    assert hit is not None
+    assert hit.spec == SPECS[3]
+    assert hit.accuracy == pytest.approx(0.912)
+    assert hit.area_mm2 == pytest.approx(1234.5)
+    assert hit.n_multipliers == 89
+    # different seed / epochs / spec are misses
+    assert fresh.get(CFG.name, 1, 30, SPECS[3]) is None
+    assert fresh.get(CFG.name, 0, 31, SPECS[3]) is None
+    assert fresh.get(CFG.name, 0, 30, SPECS[0]) is None
+
+
+def test_cache_skips_retraining(tmp_path, monkeypatch):
+    cache = BE.EvalCache(tmp_path / "evals.json")
+    specs = SPECS[:2]
+    first = BE.evaluate_population(CFG, specs, epochs=25, cache=cache)
+    assert len(cache) == 2
+
+    # a fully-cached population must never touch the finetune engine
+    def boom(*a, **k):
+        raise AssertionError("finetune ran on a fully-cached population")
+    monkeypatch.setattr(BE, "_population_finetune", boom)
+    again = BE.evaluate_population(CFG, specs, epochs=25, cache=cache)
+    for a, b in zip(first, again):
+        assert a.accuracy == b.accuracy and a.area_mm2 == b.area_mm2

@@ -71,3 +71,45 @@ def test_nsga2_deterministic():
 def test_spec_json_roundtrip():
     spec = ModelMin((LayerMin(4, 0.3, 8), LayerMin(None, 0.0, None)), 8)
     assert ModelMin.from_json(spec.to_json()) == spec
+
+
+def test_nsga2_propagates_input_bits():
+    """Regression: random genomes seeded into the population must carry the
+    search's input_bits (seed specs win, else GAConfig), not the ModelMin
+    default of 8."""
+    def evaluate(spec):
+        return (0.5, float(sum(l.bits for l in spec.layers)))
+
+    # from seed specs
+    seeds = [ModelMin.uniform(2, bits=4, input_bits=6)]
+    res = run_nsga2(2, evaluate,
+                    GAConfig(population=6, generations=2, seed=3),
+                    seed_specs=seeds)
+    assert all(s.input_bits == 6 for s in res.population)
+    # from config when there are no seed specs
+    res2 = run_nsga2(2, evaluate,
+                     GAConfig(population=6, generations=2, seed=3,
+                              input_bits=5))
+    assert all(s.input_bits == 5 for s in res2.population)
+
+
+def test_nsga2_batch_evaluate_matches_serial_path():
+    """batch_evaluate is a pure performance hook: identical GA trajectory."""
+    def evaluate(spec):
+        return (sum(l.bits for l in spec.layers) / 16.0,
+                sum(l.sparsity for l in spec.layers))
+
+    calls = []
+
+    def batch_evaluate(specs):
+        calls.append(len(specs))
+        return [evaluate(s) for s in specs]
+
+    cfg = GAConfig(population=8, generations=3, seed=7)
+    r1 = run_nsga2(2, evaluate, cfg)
+    r2 = run_nsga2(2, None, cfg, batch_evaluate=batch_evaluate)
+    assert [s.to_json() for s in r1.population] == \
+        [s.to_json() for s in r2.population]
+    np.testing.assert_array_equal(r1.objectives, r2.objectives)
+    # every generation fitted in batch calls, never one-by-one
+    assert sum(calls) == len(r2.evaluations)

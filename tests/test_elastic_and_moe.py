@@ -20,8 +20,7 @@ def test_elastic_restore_onto_new_sharding(tmp_path):
     tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
             "b": jnp.ones(8)}
     mgr.save(3, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None)),
           "b": NamedSharding(mesh, P())}
     out, _ = mgr.restore(like=tree, shardings=sh)

@@ -34,8 +34,7 @@ def test_error_feedback_accumulates_unbiased():
 
 
 def test_compressed_allreduce_single_device_mesh():
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("pod",))
     allreduce = GC.make_compressed_allreduce(mesh, "pod")
     grads = {"w": jnp.linspace(-1, 1, 16), "b": jnp.ones(4)}
     err = GC.init_error_state(grads)
