@@ -1,0 +1,126 @@
+"""Circuit compiler benchmark: compile time, simulated throughput, delay.
+
+For each printed-MLP dataset, two design points (the dense 8-bit MICRO'20
+baseline and a minimized bits/sparsity/clusters spec) are lowered to their
+bespoke netlists and measured:
+
+* **compile**   — host-side lowering time (CompiledMLP -> validated netlist);
+* **simulate**  — warm batched inferences/sec of the bit-exact netlist
+  evaluator over the test set, against the dense float forward pass of the
+  same weights (the gap is the price of gate-level exactness — the dense
+  forward is one matmul chain, the netlist is thousands of scattered
+  integer ops);
+* **verify**    — bit-exactness vs `minimize.integer_forward` and the
+  structural-vs-analytic cost cross-validation, asserted on every row;
+* **delay**     — critical-path length in adder stages and the implied
+  printed operating rate, the axis the analytic model cannot produce.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import circuit
+from repro.configs.printed_mlp import PRINTED_MLPS
+from repro.core import minimize as MZ
+from repro.core.compression_spec import ModelMin
+from repro.nn import mlp as M
+
+
+def _bench_point(cfg, spec: ModelMin, *, seed: int = 0) -> Dict:
+    params0, (_, _, xte, yte) = MZ.pretrain(cfg, seed=seed)
+    masks = MZ.make_masks(params0, spec)
+    compiled = MZ.compile_bespoke(params0, spec, masks)
+
+    t = [0.0] * 3
+    for i in range(3):
+        t0 = time.perf_counter()
+        net = circuit.compile_netlist(compiled)
+        t[i] = time.perf_counter() - t0
+    compile_ms = sorted(t)[1] * 1e3
+
+    # bit-exactness + cost agreement are part of the bench contract
+    xq = MZ.quantize_inputs(compiled, xte)
+    sim = circuit.Simulator(net)
+    out = sim.run(xq)
+    ref_pre, ref_argmax = MZ.integer_forward(compiled, xq)
+    exact = all(np.array_equal(a, b) for a, b in zip(out["pre"], ref_pre)) \
+        and np.array_equal(out["argmax"], ref_argmax)
+    cv = circuit.cross_validate(net, compiled)
+
+    # warm throughput: netlist simulation vs dense float forward
+    reps = 5
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        sim.run(xq)
+    sim_ips = reps * len(xq) / (time.perf_counter() - t0)
+
+    fwd = jax.jit(M.mlp_forward)
+    pfloat = {"layers": tuple(
+        {"w": jnp.asarray(w), "b": jnp.asarray(b)}
+        for w, b in zip(compiled.dense_weights(), compiled.biases))}
+    xj = jnp.asarray(xte)
+    fwd(pfloat, xj).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fwd(pfloat, xj).block_until_ready()
+    dense_ips = reps * len(xte) / (time.perf_counter() - t0)
+
+    sc = cv["structural"]
+    return {
+        "dataset": cfg.name, "spec": spec.to_json(), "nodes": len(net),
+        "compile_ms": compile_ms, "sim_inf_per_s": sim_ips,
+        "dense_inf_per_s": dense_ips,
+        "slowdown": dense_ips / max(sim_ips, 1e-9),
+        "critical_path_levels": sc.critical_path_levels,
+        "delay_ms": sc.delay_ms, "max_hz": sc.max_hz,
+        "bit_exact": exact, "crossval_ok": cv["ok"],
+    }
+
+
+def run(datasets=None, *, seed: int = 0) -> List[Dict]:
+    rows = []
+    for name in (datasets or sorted(PRINTED_MLPS)):
+        cfg = PRINTED_MLPS[name]
+        n_layers = len(cfg.layer_dims) - 1
+        for spec in (ModelMin.uniform(n_layers, bits=8,
+                                      input_bits=cfg.input_bits),
+                     ModelMin.uniform(n_layers, bits=4, sparsity=0.4,
+                                      clusters=8,
+                                      input_bits=cfg.input_bits)):
+            rows.append(_bench_point(cfg, spec, seed=seed))
+    return rows
+
+
+def main(fast: bool = False):
+    rows = run(["seeds", "whitewine"] if fast else None)
+    print("circuit_bench (bespoke netlist: compile / simulate / verify / "
+          "delay)")
+    print("dataset,bits,nodes,compile_ms,sim_inf_s,dense_inf_s,"
+          "cp_levels,delay_ms,max_hz,bit_exact,crossval_ok")
+    ok = True
+    for r in rows:
+        spec = ModelMin.from_json(r["spec"])
+        tag = (f"{spec.layers[0].bits}b"
+               + (f"/s{spec.layers[0].sparsity}" if spec.layers[0].sparsity
+                  else "")
+               + (f"/k{spec.layers[0].clusters}" if spec.layers[0].clusters
+                  else ""))
+        print(f"{r['dataset']},{tag},{r['nodes']},{r['compile_ms']:.1f},"
+              f"{r['sim_inf_per_s']:.0f},{r['dense_inf_per_s']:.0f},"
+              f"{r['critical_path_levels']},{r['delay_ms']:.0f},"
+              f"{r['max_hz']:.1f},{r['bit_exact']},{r['crossval_ok']}")
+        ok &= r["bit_exact"] and r["crossval_ok"]
+    print(f"acceptance (bit-exact + cost agreement on every row): "
+          f"{'PASS' if ok else 'FAIL'}")
+    # a FAIL must fail the harness/CI run, not just print
+    assert ok, "netlist bit-exactness / cost cross-validation regressed"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

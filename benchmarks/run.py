@@ -6,6 +6,8 @@ benches. Prints ``name,us_per_call,derived`` CSV summaries at the end.
   area_table      — paper §III baseline circuit table
   kernel_bench    — per-kernel derived TPU roofline
   roofline_table  — §Roofline across all dry-run cells
+  ga_bench        — GA hot path: serial vs batched population evaluation
+  circuit_bench   — bespoke netlist compile / bit-exact sim / delay
 
 ``python -m benchmarks.run [--fast] [--only NAME]``
 """
@@ -14,8 +16,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import area_table, dryrun_memory_table, fig1_standalone, \
-    fig2_combined, kernel_bench, roofline_table
+from benchmarks import area_table, circuit_bench, dryrun_memory_table, \
+    fig1_standalone, fig2_combined, ga_bench, kernel_bench, roofline_table
 
 BENCHES = [
     ("area_table", area_table.main),
@@ -24,6 +26,8 @@ BENCHES = [
     ("kernel_bench", kernel_bench.main),
     ("roofline_table", roofline_table.main),
     ("dryrun_memory_table", dryrun_memory_table.main),
+    ("ga_bench", ga_bench.main),
+    ("circuit_bench", circuit_bench.main),
 ]
 
 

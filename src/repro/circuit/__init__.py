@@ -1,0 +1,26 @@
+"""Bespoke circuit compiler: netlist IR, bit-exact simulation, structural
+cost.
+
+The analytic printed-area model (`repro.core.hw_model`) prices bespoke
+circuits from coefficient statistics; this package *builds* those circuits:
+
+* `repro.circuit.ir`        — typed integer netlist IR with derived widths
+* `repro.circuit.compile`   — QAT compile output -> CSD shift-add netlist
+* `repro.circuit.simulate`  — level-batched, jitted, vmapped exact eval
+* `repro.circuit.cost`      — structural area/power (cross-validates
+                              hw_model exactly) + critical-path delay
+
+Quick use::
+
+    net, compiled = circuit.compile_spec(cfg, spec, epochs=60)
+    acc = circuit.netlist_accuracy(net, compiled, xte, yte)
+    sc = circuit.structural_cost(net)           # area/power/delay
+    print(circuit.describe(net, sc))
+"""
+from repro.circuit import compile, cost, ir, simulate  # noqa: F401
+from repro.circuit.compile import compile_netlist, compile_spec  # noqa: F401
+from repro.circuit.cost import (DELAY_FA_MS, StructuralCost,  # noqa: F401
+                                cross_validate, describe, structural_cost)
+from repro.circuit.ir import Netlist, Node, Op  # noqa: F401
+from repro.circuit.simulate import (Simulator, netlist_accuracy,  # noqa: F401
+                                    simulate)

@@ -184,57 +184,86 @@ class EvalCache:
     """Append-only on-disk cache of spec evaluations.
 
     One JSON file, atomically replaced on flush; keys are
-    "dataset|seed|epochs|spec.to_json()" so resumed searches, repeated
-    sweeps and the serial/batched paths all share results.
+    "dataset|seed=S|epochs=E|spec.to_json()" (suffixed "|netlist" for
+    netlist-exact evaluations — a different objective, never mixed with
+    analytic entries) so resumed searches, repeated sweeps and the
+    serial/batched paths all share results. ``flush`` re-reads and merges
+    the on-disk file first, so concurrent sweep processes sharing a cache
+    file union their entries instead of clobbering each other.
     """
 
     def __init__(self, path):
         self.path = Path(path)
-        self._data: Dict[str, Dict] = {}
-        if self.path.exists():
-            try:
-                self._data = json.loads(self.path.read_text())
-            except (json.JSONDecodeError, OSError) as e:
-                # a damaged cache must not kill a long search — start
-                # empty; the next flush atomically replaces the file
-                import warnings
-                warnings.warn(f"EvalCache {self.path} unreadable ({e}); "
-                              "starting empty")
+        self._data: Dict[str, Dict] = self._read()
+
+    def _read(self) -> Dict[str, Dict]:
+        if not self.path.exists():
+            return {}
+        try:
+            return json.loads(self.path.read_text())
+        except (json.JSONDecodeError, OSError) as e:
+            # a damaged cache must not kill a long search — start
+            # empty; the next flush atomically replaces the file
+            import warnings
+            warnings.warn(f"EvalCache {self.path} unreadable ({e}); "
+                          "starting empty")
+            return {}
 
     @staticmethod
-    def key(dataset: str, seed: int, epochs: int, spec: ModelMin) -> str:
-        return f"{dataset}|seed={seed}|epochs={epochs}|{spec.to_json()}"
+    def key(dataset: str, seed: int, epochs: int, spec: ModelMin,
+            netlist: bool = False) -> str:
+        base = f"{dataset}|seed={seed}|epochs={epochs}|{spec.to_json()}"
+        return base + "|netlist" if netlist else base
 
     def __len__(self):
         return len(self._data)
 
-    def get(self, dataset: str, seed: int, epochs: int,
-            spec: ModelMin) -> Optional[MZ.EvalResult]:
-        d = self._data.get(self.key(dataset, seed, epochs, spec))
+    def get(self, dataset: str, seed: int, epochs: int, spec: ModelMin,
+            netlist: bool = False) -> Optional[MZ.EvalResult]:
+        d = self._data.get(self.key(dataset, seed, epochs, spec, netlist))
         if d is None:
             return None
         return MZ.EvalResult(ModelMin.from_json(d["spec"]), d["accuracy"],
                              d["area_mm2"], d["power_mw"],
-                             d["n_multipliers"])
+                             d["n_multipliers"],
+                             delay_levels=d.get("delay_levels"))
 
     def put(self, dataset: str, seed: int, epochs: int,
-            r: MZ.EvalResult) -> None:
-        self._data[self.key(dataset, seed, epochs, r.spec)] = {
+            r: MZ.EvalResult, netlist: bool = False) -> None:
+        self._data[self.key(dataset, seed, epochs, r.spec, netlist)] = {
             "spec": r.spec.to_json(), "accuracy": float(r.accuracy),
             "area_mm2": float(r.area_mm2), "power_mw": float(r.power_mw),
-            "n_multipliers": int(r.n_multipliers)}
+            "n_multipliers": int(r.n_multipliers),
+            "delay_levels": (None if r.delay_levels is None
+                             else int(r.delay_levels))}
 
     def flush(self) -> None:
         self.path.parent.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
-                                   prefix=self.path.name + ".")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(self._data, f)
-            os.replace(tmp, self.path)        # atomic publish
-        except BaseException:
-            os.unlink(tmp)
-            raise
+        # merge concurrent writers under an flock'd sidecar: entries
+        # flushed by another process since our last read survive; on a key
+        # conflict ours wins (we hold the fresher evaluation of that
+        # spec). The lock serializes read-merge-replace so simultaneous
+        # flushes cannot interleave and drop each other's entries.
+        with open(self.path.with_suffix(self.path.suffix + ".lock"),
+                  "w") as lock:
+            try:
+                import fcntl
+                fcntl.flock(lock, fcntl.LOCK_EX)
+            except ImportError:       # non-POSIX: merge without the lock
+                pass
+            disk = self._read()
+            if disk:
+                disk.update(self._data)
+                self._data = disk
+            fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                       prefix=self.path.name + ".")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(self._data, f)
+                os.replace(tmp, self.path)    # atomic publish
+            except BaseException:
+                os.unlink(tmp)
+                raise
 
 
 # ---------------------------------------------------------------------------
@@ -242,17 +271,31 @@ class EvalCache:
 # ---------------------------------------------------------------------------
 
 
-def _compile_and_price(params_pop, specs, masks_serial, xte,
-                       yte) -> List[MZ.EvalResult]:
+def _compile_and_price(params_pop, specs, masks_serial, xte, yte, *,
+                       netlist: bool = False) -> List[MZ.EvalResult]:
     """Host-side bespoke compile per candidate + one vectorized pricing
-    call for the whole population."""
+    call for the whole population. Every candidate is additionally lowered
+    to its bespoke netlist (`repro.circuit`) for the critical-path delay;
+    with ``netlist=True`` the accuracy objective is the netlist-exact
+    simulation of the printed datapath instead of the float emulation
+    (area/power stay on the analytic pricing, which the structural netlist
+    cost is tested to reproduce exactly)."""
+    from repro import circuit as CIRC            # lazy: circuit imports us
     compiled = []
     for p, spec in enumerate(specs):
         params_p = jax.tree_util.tree_map(lambda a: a[p], params_pop)
         compiled.append(MZ.compile_bespoke(params_p, spec, masks_serial[p]))
+    nets = [CIRC.compile_netlist(c) for c in compiled]
+    delays = [n.critical_path_levels() for n in nets]
 
-    # accuracy of the exact bespoke arithmetic, per candidate (cheap numpy)
-    accs = [MZ.compiled_accuracy(c, xte, yte) for c in compiled]
+    if netlist:
+        # exact integer evaluation of the materialized circuit
+        accs = [CIRC.netlist_accuracy(n, c, xte, yte)
+                for n, c in zip(nets, compiled)]
+    else:
+        # accuracy of the exact bespoke arithmetic, per candidate
+        # (cheap numpy float emulation)
+        accs = [MZ.compiled_accuracy(c, xte, yte) for c in compiled]
 
     # stack per-layer integer weights / codebooks and price the whole
     # population in one hw_model call (pad codebooks to the layer's max k)
@@ -282,17 +325,23 @@ def _compile_and_price(params_pop, specs, masks_serial, xte,
 
     return [MZ.EvalResult(spec, accs[p], float(cost["area_mm2"][p]),
                           float(cost["power_mw"][p]),
-                          int(cost["n_multipliers"][p]))
+                          int(cost["n_multipliers"][p]),
+                          delay_levels=delays[p])
             for p, spec in enumerate(specs)]
 
 
 def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
                         epochs: int = 150, seed: int = 0,
-                        cache: Optional[EvalCache] = None
-                        ) -> List[MZ.EvalResult]:
+                        cache: Optional[EvalCache] = None,
+                        netlist: bool = False) -> List[MZ.EvalResult]:
     """Evaluate a population of specs with ONE vmapped QAT finetune + ONE
     vectorized pricing pass. Order-preserving; duplicates and cache hits
     are evaluated once. Drop-in for `[evaluate_spec(cfg, s) for s in specs]`.
+
+    ``netlist=True`` switches the accuracy objective to the bit-exact
+    simulation of each candidate's compiled netlist (`repro.circuit`) —
+    the printed datapath itself, integer biases and all — cached under a
+    separate key space.
     """
     specs = list(specs)
     results: Dict[str, MZ.EvalResult] = {}
@@ -302,8 +351,11 @@ def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
         k = s.to_json()
         if k in results or k in queued:
             continue
-        hit = cache.get(cfg.name, seed, epochs, s) if cache else None
-        if hit is not None:
+        hit = (cache.get(cfg.name, seed, epochs, s, netlist=netlist)
+               if cache else None)
+        if hit is not None and hit.delay_levels is not None:
+            # entries from caches predating the circuit compiler carry no
+            # delay — fall through and re-evaluate so they upgrade in place
             results[k] = hit
         else:
             todo.append(s)
@@ -326,10 +378,10 @@ def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
             jnp.asarray(xtr), jnp.asarray(ytr), epochs=epochs, lr=2e-3)
         trained = jax.tree_util.tree_map(lambda a: a[:n_real], trained)
         for r in _compile_and_price(trained, todo, masks_serial[:n_real],
-                                    xte, yte):
+                                    xte, yte, netlist=netlist):
             results[r.spec.to_json()] = r
             if cache is not None:
-                cache.put(cfg.name, seed, epochs, r)
+                cache.put(cfg.name, seed, epochs, r, netlist=netlist)
         if cache is not None:
             cache.flush()
 
@@ -338,11 +390,26 @@ def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
 
 def make_batch_evaluator(cfg: PrintedMLPConfig, *, epochs: int = 150,
                          seed: int = 0,
-                         cache: Optional[EvalCache] = None):
-    """GA adapter: List[ModelMin] -> List[(1 - accuracy, area_mm2)].
-    Plug into `run_nsga2(..., batch_evaluate=...)`."""
+                         cache: Optional[EvalCache] = None,
+                         netlist: bool = False,
+                         include_delay: bool = False,
+                         record: Optional[Dict[str, MZ.EvalResult]] = None):
+    """GA adapter: List[ModelMin] -> List[(1 - accuracy, area_mm2[,
+    delay_levels])]. Plug into `run_nsga2(..., batch_evaluate=...)`.
+
+    ``netlist=True`` makes the accuracy objective netlist-exact (the
+    simulated printed datapath); ``include_delay=True`` adds the compiled
+    circuit's critical path as a third minimized objective. ``record``, if
+    given, collects every EvalResult by spec json — callers (fig2, the
+    example) read Pareto-front delay out of it without re-evaluating.
+    """
     def batch_evaluate(specs: Sequence[ModelMin]):
         rs = evaluate_population(cfg, specs, epochs=epochs, seed=seed,
-                                 cache=cache)
+                                 cache=cache, netlist=netlist)
+        if record is not None:
+            record.update((r.spec.to_json(), r) for r in rs)
+        if include_delay:
+            return [(1.0 - r.accuracy, r.area_mm2, float(r.delay_levels))
+                    for r in rs]
         return [(1.0 - r.accuracy, r.area_mm2) for r in rs]
     return batch_evaluate

@@ -1,10 +1,15 @@
 """Hardware-aware NSGA-II genetic algorithm (paper Fig. 2).
 
 Genome: one (bits, sparsity, clusters) gene per compressible layer.
-Objectives (both minimized): (1 - accuracy, hardware cost). The hardware
-cost callback is pluggable — printed area (mm^2) for the paper's MLPs,
-roofline seconds (`core.tpu_cost`) for the beyond-paper LM integration;
-"hardware-aware" means the GA sees the real deployment cost, not a proxy.
+Objectives (all minimized): (1 - accuracy, hardware cost[, ...]). The
+evaluation callback is pluggable — printed area (mm^2) for the paper's
+MLPs, roofline seconds (`core.tpu_cost`) for the beyond-paper LM
+integration; "hardware-aware" means the GA sees the real deployment cost,
+not a proxy. Evaluators may return more than two objectives (NSGA-II's
+sorting/crowding are dimension-agnostic): the netlist-exact evaluator
+(`batch_eval.make_batch_evaluator(netlist=True, include_delay=True)`)
+adds the compiled circuit's critical-path delay as a third objective,
+which the analytic cost model cannot express.
 """
 from __future__ import annotations
 
@@ -38,9 +43,9 @@ class GAConfig:
 @dataclasses.dataclass
 class GAResult:
     population: List[ModelMin]
-    objectives: np.ndarray               # (N, 2) minimized
+    objectives: np.ndarray               # (N, K>=2) minimized
     history: List[Dict]                  # per-generation stats
-    evaluations: Dict[str, Tuple[float, float]]  # spec json -> objectives
+    evaluations: Dict[str, Tuple[float, ...]]  # spec json -> objectives
 
 
 def _random_gene(rng, cfg: GAConfig) -> LayerMin:
@@ -83,8 +88,9 @@ def run_nsga2(n_layers: int,
               batch_evaluate: Optional[
                   Callable[[List[ModelMin]], List[Tuple[float, float]]]]
               = None) -> GAResult:
-    """evaluate(spec) -> (obj1, obj2), both minimized. Deterministic for a
-    fixed GAConfig.seed. Memoizes repeated specs.
+    """evaluate(spec) -> (obj1, obj2[, ...]), all minimized (every spec
+    must return the same arity). Deterministic for a fixed GAConfig.seed.
+    Memoizes repeated specs.
 
     When `batch_evaluate` is given (e.g. `batch_eval.make_batch_evaluator`),
     every generation's uncached specs are fitted in ONE call — the batched
@@ -130,12 +136,15 @@ def run_nsga2(n_layers: int,
                 continue
             cd = crowding_distance(objs[f])
             ranked.extend([int(i) for i in f[np.argsort(-cd)]])
-        history.append({
+        entry = {
             "generation": gen,
             "best_acc": float(1.0 - objs[:, 0].min()),
             "min_cost": float(objs[:, 1].min()),
             "front_size": int(len(fronts[0])),
-        })
+        }
+        if objs.shape[1] > 2:          # netlist-exact delay objective
+            entry["min_delay"] = float(objs[:, 2].min())
+        history.append(entry)
         # offspring
         children: List[ModelMin] = []
         while len(children) < cfg.population:

@@ -58,6 +58,30 @@ def csd_nonzero_digits(c: int) -> int:
     return count
 
 
+def csd_digits(c: int) -> List[Tuple[int, int]]:
+    """Full signed-digit recoding of ``c``: [(shift, sign)] with sign in
+    {+1, -1} and c == sum(sign << shift). Same Avizienis recurrence as
+    `csd_nonzero_digits` — ``len(csd_digits(c)) == csd_nonzero_digits(c)``
+    for every c — but keeping the digits, which is what the bespoke circuit
+    compiler (`repro.circuit.compile`) materializes as one shift-add
+    network per constant coefficient."""
+    neg = c < 0
+    c = abs(int(c))
+    out: List[Tuple[int, int]] = []
+    pos = 0
+    while c:
+        if c & 1:
+            if (c & 3) == 3:
+                out.append((pos, -1))
+                c += 1
+            else:
+                out.append((pos, 1))
+                c -= 1
+        c >>= 1
+        pos += 1
+    return [(p, -s) for p, s in out] if neg else out
+
+
 def csd_nonzero_digits_vec(q: np.ndarray) -> np.ndarray:
     """Vectorized `csd_nonzero_digits` over an integer tensor of any shape —
     the same Avizienis recoding run on all coefficients at once with array

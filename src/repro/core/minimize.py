@@ -163,6 +163,56 @@ def compile_bespoke(params, spec: ModelMin, masks) -> CompiledMLP:
                        spec.input_bits)
 
 
+def quantize_inputs(c: CompiledMLP, x: np.ndarray) -> np.ndarray:
+    """ADC front-end: features in [0, 1] -> unsigned integers on the
+    2**input_bits - 1 grid — the same rounding `compiled_accuracy` applies
+    before its float emulation, kept integer."""
+    levels = (1 << c.input_bits) - 1
+    return np.round(np.asarray(x, np.float32) * levels).astype(np.int64)
+
+
+def integer_biases(c: CompiledMLP) -> List[np.ndarray]:
+    """Bias constants on each layer's integer accumulator grid.
+
+    Layer i's integer pre-activation represents the float one through the
+    cumulative factor alpha_i = (prod_{j<=i} scale_j) / (2**input_bits - 1)
+    (inputs contribute 1/levels, each weight matmul its layer scale), so the
+    hardwired bias constant is round(b / alpha_i). ReLU and argmax commute
+    with the positive alpha_i, making this the only rounding the bespoke
+    integer circuit adds on top of the QAT compile."""
+    alpha = 1.0 / ((1 << c.input_bits) - 1)
+    out = []
+    for i, (s, b) in enumerate(zip(c.scales, c.biases)):
+        alpha *= s
+        v = np.round(np.asarray(b, np.float64) / alpha)
+        if np.abs(v).max(initial=0.0) >= 2.0 ** 62:
+            raise OverflowError(
+                f"layer {i} bias constant exceeds the 62-bit exact integer "
+                f"budget (degenerate scale chain alpha={alpha:.3e})")
+        out.append(v.astype(np.int64))
+    return out
+
+
+def integer_forward(c: CompiledMLP, x_int: np.ndarray
+                    ) -> Tuple[List[np.ndarray], np.ndarray]:
+    """The static QAT forward in exact integer arithmetic — the reference
+    semantics the compiled netlist (`repro.circuit`) must reproduce
+    bit-for-bit.
+
+    x_int: (B, d_in) integers from `quantize_inputs`. Returns (per-layer
+    integer pre-activations [(B, d_out_i) int64], argmax class (B,)).
+    """
+    b_ints = integer_biases(c)
+    a = np.asarray(x_int, np.int64)
+    pres: List[np.ndarray] = []
+    for i, (q, b) in enumerate(zip(c.q_layers, b_ints)):
+        pre = a @ q.astype(np.int64) + b
+        pres.append(pre)
+        if i < len(c.q_layers) - 1:
+            a = np.maximum(pre, 0)
+    return pres, np.argmax(pres[-1], axis=1)
+
+
 def compiled_accuracy(c: CompiledMLP, x: np.ndarray, y: np.ndarray) -> float:
     """Accuracy of the exact bespoke arithmetic: quantized inputs x quantized
     integer weights (float emulation is exact for these ranges)."""
@@ -193,6 +243,10 @@ class EvalResult:
     area_mm2: float
     power_mw: float
     n_multipliers: int
+    # critical-path length of the compiled netlist in full-adder-stage
+    # delays (repro.circuit) — the analytic model cannot produce this;
+    # None for results predating the circuit compiler (old caches).
+    delay_levels: Optional[int] = None
 
 
 def make_masks(params0, spec: ModelMin):
@@ -208,8 +262,10 @@ def evaluate_spec(cfg: PrintedMLPConfig, spec: ModelMin, *,
     compiled = compile_bespoke(params, spec, masks)
     acc = compiled_accuracy(compiled, xte, yte)
     cost = compiled_cost(compiled)
+    from repro.circuit import compile as CC     # lazy: circuit imports us
+    delay = CC.compile_netlist(compiled).critical_path_levels()
     return EvalResult(spec, acc, cost.area_mm2, cost.power_mw,
-                      cost.n_multipliers)
+                      cost.n_multipliers, delay_levels=delay)
 
 
 def evaluate_specs(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,

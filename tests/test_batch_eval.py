@@ -154,6 +154,52 @@ def test_eval_cache_roundtrip(tmp_path):
     assert fresh.get(CFG.name, 0, 30, SPECS[0]) is None
 
 
+def test_cache_two_writers_merge_on_flush(tmp_path):
+    """Two processes sharing one cache file must union their entries:
+    flush re-reads the on-disk JSON before the atomic replace, so a
+    writer no longer clobbers what a concurrent writer published."""
+    path = tmp_path / "shared.json"
+    a = BE.EvalCache(path)
+    b = BE.EvalCache(path)              # opened before a writes anything
+    a.put(CFG.name, 0, 30, MZ.EvalResult(SPECS[0], 0.9, 100.0, 1.0, 10,
+                                         delay_levels=15))
+    a.flush()
+    b.put(CFG.name, 0, 30, MZ.EvalResult(SPECS[1], 0.8, 50.0, 0.5, 5,
+                                         delay_levels=12))
+    b.flush()                           # must not drop a's entry
+
+    merged = BE.EvalCache(path)
+    assert len(merged) == 2
+    assert merged.get(CFG.name, 0, 30, SPECS[0]).area_mm2 == 100.0
+    assert merged.get(CFG.name, 0, 30, SPECS[1]).area_mm2 == 50.0
+    # on a key conflict the flushing writer's (fresher) entry wins
+    a2 = BE.EvalCache(path)
+    a2.put(CFG.name, 0, 30, MZ.EvalResult(SPECS[0], 0.95, 99.0, 1.0, 10,
+                                          delay_levels=15))
+    a2.flush()
+    assert BE.EvalCache(path).get(CFG.name, 0, 30,
+                                  SPECS[0]).area_mm2 == 99.0
+
+
+def test_cache_roundtrips_delay_and_separates_netlist_keyspace(tmp_path):
+    cache = BE.EvalCache(tmp_path / "evals.json")
+    r = MZ.EvalResult(SPECS[0], 0.9, 100.0, 1.0, 10, delay_levels=17)
+    cache.put(CFG.name, 0, 30, r)
+    cache.flush()
+    hit = BE.EvalCache(tmp_path / "evals.json").get(CFG.name, 0, 30,
+                                                    SPECS[0])
+    assert hit.delay_levels == 17
+    # netlist-exact results live under their own keys (different objective)
+    assert cache.get(CFG.name, 0, 30, SPECS[0], netlist=True) is None
+    cache.put(CFG.name, 0, 30,
+              MZ.EvalResult(SPECS[0], 0.89, 100.0, 1.0, 10,
+                            delay_levels=17), netlist=True)
+    assert cache.get(CFG.name, 0, 30,
+                     SPECS[0], netlist=True).accuracy == pytest.approx(0.89)
+    assert cache.get(CFG.name, 0, 30,
+                     SPECS[0]).accuracy == pytest.approx(0.9)
+
+
 def test_cache_skips_retraining(tmp_path, monkeypatch):
     cache = BE.EvalCache(tmp_path / "evals.json")
     specs = SPECS[:2]

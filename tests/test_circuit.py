@@ -1,0 +1,272 @@
+"""Circuit compiler tests: netlist IR invariants, bit-exact equivalence of
+the simulated netlist with the QAT integer forward, and exact agreement of
+the structural cost with the analytic `hw_model` pricing."""
+import numpy as np
+import pytest
+
+from repro import circuit
+from repro.circuit import ir
+from repro.configs.printed_mlp import PRINTED_MLPS
+from repro.core import hw_model as HW
+from repro.core import minimize as MZ
+from repro.core.compression_spec import ModelMin
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def synth_compiled(dims, bits, *, in_bits=8, sparsity=0.0, clusters=None,
+                   seed=0) -> MZ.CompiledMLP:
+    """Fabricate a CompiledMLP directly (random integer weights on the
+    quantization grid, consistent cluster structure) — exercises the
+    compiler/simulator/cost over arbitrary spec combinations without
+    training."""
+    r = np.random.default_rng(seed)
+    q_layers, scales, biases, cls, w_bits = [], [], [], [], []
+    for d_in, d_out in zip(dims[:-1], dims[1:]):
+        qmax = 2 ** (bits - 1) - 1
+        if clusters:
+            cb = r.integers(-qmax, qmax + 1, (d_in, clusters)).astype(
+                np.int64)
+            idx = r.integers(0, clusters, (d_in, d_out))
+            q = np.take_along_axis(cb, idx, axis=1)
+            q = q * (r.random((d_in, d_out)) >= sparsity)
+            cls.append((idx, cb))
+        else:
+            q = r.integers(-qmax, qmax + 1, (d_in, d_out)).astype(np.int64)
+            q[r.random((d_in, d_out)) < sparsity] = 0
+            cls.append(None)
+        q_layers.append(q)
+        scales.append(float(r.uniform(0.002, 0.02)))
+        biases.append(r.normal(0, 0.3, d_out).astype(np.float32))
+        w_bits.append(bits)
+    return MZ.CompiledMLP(q_layers, scales, biases, cls, w_bits, in_bits)
+
+
+def assert_bit_exact(net, c, x):
+    xq = MZ.quantize_inputs(c, x)
+    ref_pres, ref_argmax = MZ.integer_forward(c, xq)
+    out = circuit.simulate(net, xq)
+    for i, (got, ref) in enumerate(zip(out["pre"], ref_pres)):
+        np.testing.assert_array_equal(got, ref,
+                                      err_msg=f"layer {i} pre-activations")
+    np.testing.assert_array_equal(out["argmax"], ref_argmax)
+
+
+def assert_cost_matches(net, c):
+    cv = circuit.cross_validate(net, c)
+    assert cv["ok"], cv["layers"]
+    sc, ac = cv["structural"], cv["analytic"]
+    for s, a in zip(sc.layers, ac.layers):
+        assert s.n_multipliers == a.n_multipliers
+        assert s.mult_fa == a.mult_fa
+        assert s.adder_fa == a.adder_fa
+        assert s.act_fa == a.act_fa
+    assert sc.argmax_fa == ac.argmax_fa
+    assert sc.n_multipliers == ac.n_multipliers
+    assert sc.area_mm2 == pytest.approx(ac.area_mm2, rel=1e-12)
+    assert sc.power_mw == pytest.approx(ac.power_mw, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# IR
+# ---------------------------------------------------------------------------
+
+
+def test_ir_widths_and_interval_arithmetic():
+    net = ir.Netlist(in_bits=8, w_bits=[8])
+    x = net.input(0)                       # [0, 255] -> 9 bits signed
+    assert net.nodes[x].width == 9
+    s = net.shl(x, 3)                      # [0, 2040]
+    assert (net.nodes[s].lo, net.nodes[s].hi) == (0, 2040)
+    n = net.neg(s)                         # [-2040, 0]
+    assert net.nodes[n].width == 12
+    d = net.sub(x, s)                      # [0-2040, 255-0]
+    assert (net.nodes[d].lo, net.nodes[d].hi) == (-2040, 255)
+    r = net.relu(d)
+    assert (net.nodes[r].lo, net.nodes[r].hi) == (0, 255)
+
+
+def test_ir_const_dedup_and_topo_order():
+    net = ir.Netlist(in_bits=8, w_bits=[8])
+    a = net.const(42)
+    b = net.const(42)
+    assert a == b
+    assert net.const(-42) != a
+    x = net.input(0)
+    y = net.add(x, a)
+    assert net.nodes[y].args == (x, a)
+    levels = net.levels()
+    assert x in levels[0] and y in levels[1]
+
+
+def test_ir_depths_model():
+    net = ir.Netlist(in_bits=8, w_bits=[8])
+    x = net.input(0)
+    s = net.shl(x, 2)                      # wire: +0
+    a = net.add(s, net.shl(x, 0))          # +1
+    r = net.relu(a)                        # +1
+    depths = net.depths()
+    assert depths[s] == 0 and depths[a] == 1 and depths[r] == 2
+
+
+def test_csd_digits_reconstruct_and_count():
+    for c in list(range(-300, 300)) + [2 ** 40 - 3, -(2 ** 40 - 3)]:
+        digits = HW.csd_digits(c)
+        assert sum(s << p for p, s in digits) == c
+        assert len(digits) == HW.csd_nonzero_digits(c)
+        # canonical: no two adjacent non-zero digits
+        pos = sorted(p for p, _ in digits)
+        assert all(b - a >= 2 for a, b in zip(pos, pos[1:]))
+
+
+# ---------------------------------------------------------------------------
+# bit-exact simulation vs the QAT integer forward (randomized spec sweep)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dims,bits,sparsity,clusters", [
+    ((7, 8, 3), 8, 0.0, None),             # dense 8-bit baseline shape
+    ((7, 8, 3), 2, 0.0, None),             # extreme quantization
+    ((11, 10, 7), 6, 0.5, None),           # pruned
+    ((11, 10, 7), 4, 0.0, 4),              # clustered
+    ((16, 20, 10), 8, 0.3, 8),             # pruned + clustered
+    ((5, 6, 6, 4), 7, 0.2, 3),             # 3 layers, everything on
+])
+def test_netlist_bit_exact_synthetic(dims, bits, sparsity, clusters):
+    c = synth_compiled(dims, bits, sparsity=sparsity, clusters=clusters,
+                       seed=hash((dims, bits)) % 2 ** 31)
+    net = circuit.compile_netlist(c)
+    x = RNG.random((17, dims[0])).astype(np.float32)
+    assert_bit_exact(net, c, x)
+    assert_cost_matches(net, c)
+
+
+def test_netlist_bit_exact_wide_words_int64_path():
+    """A deep stack pushes accumulator words past 31 bits: the simulator
+    must switch to exact int64 and still match the reference."""
+    c = synth_compiled((11, 12, 12, 7), 8, seed=3)
+    net = circuit.compile_netlist(c)
+    assert net.max_width > 31           # the point of this test
+    assert_bit_exact(net, c, RNG.random((9, 11)).astype(np.float32))
+
+
+def test_fully_pruned_neuron_keeps_bias_add():
+    """A neuron whose whole input column is pruned still prints its bias
+    accumulator — both models charge exactly one adder for it."""
+    c = synth_compiled((6, 5, 3), 8, seed=7)
+    c.q_layers[0][:, 2] = 0             # kill neuron 2 of the hidden layer
+    net = circuit.compile_netlist(c)
+    assert_bit_exact(net, c, RNG.random((11, 6)).astype(np.float32))
+    assert_cost_matches(net, c)
+
+
+def test_power_of_two_and_unit_coefficients_are_wires():
+    """|coeff| a power of two lowers to a single SHL (plus NEG when
+    negative): zero ADD/SUB gates inside the multiplier."""
+    c = synth_compiled((3, 2), 8, seed=1)
+    c.q_layers[0][:] = np.array([[1, -1], [64, -64], [2, 16]])
+    net = circuit.compile_netlist(c)
+    mult_adders = sum(1 for n in net.nodes
+                      if n.role == ir.ROLE_MULT
+                      and n.op in (ir.Op.ADD, ir.Op.SUB))
+    assert mult_adders == 0
+    assert_bit_exact(net, c, RNG.random((8, 3)).astype(np.float32))
+    assert_cost_matches(net, c)
+
+
+def test_all_negative_csd_recoding():
+    """-5 recodes to (-4, -1): no positive digit, the chain needs its NEG."""
+    c = synth_compiled((2, 1), 8, seed=1)
+    c.q_layers[0][:] = np.array([[-5], [-3]])
+    net = circuit.compile_netlist(c)
+    assert_bit_exact(net, c, RNG.random((8, 2)).astype(np.float32))
+    assert_cost_matches(net, c)
+
+
+def test_single_sample_run():
+    c = synth_compiled((7, 8, 3), 8)
+    net = circuit.compile_netlist(c)
+    xq = MZ.quantize_inputs(c, RNG.random((1, 7)).astype(np.float32))
+    out = circuit.simulate(net, xq[0])      # 1-D input path
+    ref_pres, ref_argmax = MZ.integer_forward(c, xq)
+    np.testing.assert_array_equal(out["pre"][-1], ref_pres[-1][0])
+    assert out["argmax"] == ref_argmax[0]
+
+
+def test_cluster_sharing_collapses_products():
+    """With per-input clustering the number of product subnets equals the
+    analytic used-cluster count, not the active-weight count."""
+    c = synth_compiled((8, 32), 8, clusters=3, seed=2)
+    net = circuit.compile_netlist(c)
+    roots = sum(1 for n in net.nodes if n.product_root)
+    active = int((c.q_layers[0] != 0).sum())
+    assert roots <= 8 * 3 < active
+    assert_cost_matches(net, c)
+    assert_bit_exact(net, c, RNG.random((6, 8)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# every seed-dataset MLP through the real QAT-compile path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(PRINTED_MLPS))
+@pytest.mark.parametrize("spec_kw", [
+    dict(bits=8),                                      # MICRO'20 baseline
+    dict(bits=4, sparsity=0.4, clusters=8),            # minimized point
+])
+def test_netlist_matches_qat_forward_on_dataset(name, spec_kw):
+    cfg = PRINTED_MLPS[name]
+    n_layers = len(cfg.layer_dims) - 1
+    spec = ModelMin.uniform(n_layers, input_bits=cfg.input_bits, **spec_kw)
+    params0, (_, _, xte, yte) = MZ.pretrain(cfg)
+    masks = MZ.make_masks(params0, spec)
+    compiled = MZ.compile_bespoke(params0, spec, masks)
+    net = circuit.compile_netlist(compiled)
+    assert_bit_exact(net, compiled, xte)
+    assert_cost_matches(net, compiled)
+    # the integer circuit only adds bias-constant rounding on top of the
+    # float emulation: test-set predictions stay essentially identical
+    acc_net = circuit.netlist_accuracy(net, compiled, xte, yte)
+    acc_float = MZ.compiled_accuracy(compiled, xte, yte)
+    assert abs(acc_net - acc_float) <= 0.02
+
+
+def test_evaluate_spec_reports_netlist_delay():
+    cfg = PRINTED_MLPS["seeds"]
+    n_layers = len(cfg.layer_dims) - 1
+    r = MZ.evaluate_spec(cfg, ModelMin.uniform(n_layers, bits=6), epochs=10)
+    assert r.delay_levels is not None and r.delay_levels > 0
+
+
+def test_population_netlist_mode_prices_identically():
+    """netlist=True swaps only the accuracy objective for the bit-exact
+    simulation; area/power/multipliers/delay are unchanged (the structural
+    cost is the analytic cost — that's the cross-validation invariant)."""
+    from repro.core import batch_eval as BE
+    cfg = PRINTED_MLPS["seeds"]
+    n_layers = len(cfg.layer_dims) - 1
+    specs = [ModelMin.uniform(n_layers, bits=8),
+             ModelMin.uniform(n_layers, bits=3, sparsity=0.3, clusters=4)]
+    ra = BE.evaluate_population(cfg, specs, epochs=10)
+    rn = BE.evaluate_population(cfg, specs, epochs=10, netlist=True)
+    for a, b in zip(ra, rn):
+        assert a.area_mm2 == b.area_mm2
+        assert a.power_mw == b.power_mw
+        assert a.n_multipliers == b.n_multipliers
+        assert a.delay_levels == b.delay_levels
+        assert abs(a.accuracy - b.accuracy) <= 0.05
+
+
+def test_overflow_guard():
+    """A degenerate scale chain that would exceed the 62-bit exact budget
+    must be rejected at compile time, not silently wrapped at runtime."""
+    c = synth_compiled((7, 8, 3), 8)
+    c.scales[1] = 1e-16                 # blows up the layer-2 bias grid
+    with pytest.raises(OverflowError):
+        circuit.compile_netlist(c)

@@ -68,6 +68,21 @@ def test_nsga2_deterministic():
         [s.to_json() for s in r2.population]
 
 
+def test_nsga2_handles_three_objectives():
+    """NSGA-II is dimension-agnostic: a netlist-exact evaluator can add
+    critical-path delay as a third minimized objective, and the history
+    tracks its per-generation minimum."""
+    def evaluate(spec):
+        bits = sum(l.bits for l in spec.layers)
+        sp = sum(l.sparsity for l in spec.layers)
+        return (bits / 16.0, sp, float(10 + bits))   # delay grows with bits
+    res = run_nsga2(2, evaluate, GAConfig(population=8, generations=3,
+                                          seed=2))
+    assert res.objectives.shape == (8, 3)
+    assert all("min_delay" in h for h in res.history)
+    assert res.history[-1]["min_delay"] >= 10.0
+
+
 def test_spec_json_roundtrip():
     spec = ModelMin((LayerMin(4, 0.3, 8), LayerMin(None, 0.0, None)), 8)
     assert ModelMin.from_json(spec.to_json()) == spec

@@ -1,8 +1,11 @@
 """Tests for the printed bespoke area/power model."""
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core import hw_model as HW
+
+BOUND = 2 ** 62 - 1          # documented exactness range of the vec path
 
 
 def test_csd_known_values():
@@ -20,6 +23,43 @@ def test_csd_known_values():
 def test_csd_never_exceeds_binary_ones():
     for c in range(1, 512):
         assert HW.csd_nonzero_digits(c) <= bin(c).count("1")
+
+
+def test_csd_vec_matches_scalar_at_int64_boundary():
+    """Deterministic spot-check of the vectorized recoding at the edges of
+    its documented |c| < 2**62 range (runs with or without hypothesis)."""
+    cases = np.array([0, 1, -1, 3, -3, 2 ** 61, -(2 ** 61), BOUND, -BOUND,
+                      BOUND - 1, 2 ** 61 + 2 ** 59, 0x5555555555555555 >> 2,
+                      -(0x2AAAAAAAAAAAAAAA)], np.int64)
+    ref = [HW.csd_nonzero_digits(int(c)) for c in cases]
+    np.testing.assert_array_equal(HW.csd_nonzero_digits_vec(cases), ref)
+    # the tensor shape is irrelevant to the recoding
+    np.testing.assert_array_equal(
+        HW.csd_nonzero_digits_vec(cases.reshape(13, 1, 1)).reshape(-1), ref)
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.lists(st.integers(min_value=-BOUND, max_value=BOUND),
+                min_size=1, max_size=64))
+def test_csd_vec_matches_scalar_property(xs):
+    """Property: the array bit-twiddling recoding equals the scalar loop on
+    arbitrary int64 tensors — negatives and the |c| < 2**62 boundary
+    included (hypothesis-optional via tests/_hypothesis_compat.py)."""
+    arr = np.asarray(xs, np.int64)
+    ref = np.array([HW.csd_nonzero_digits(int(c)) for c in xs], np.int64)
+    np.testing.assert_array_equal(HW.csd_nonzero_digits_vec(arr), ref)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=-BOUND, max_value=BOUND))
+def test_csd_digits_recoding_is_canonical(c):
+    """Property: `csd_digits` reconstructs c exactly, its digit count is
+    `csd_nonzero_digits(c)`, and no two non-zero digits are adjacent."""
+    digits = HW.csd_digits(c)
+    assert sum(s << p for p, s in digits) == c
+    assert len(digits) == HW.csd_nonzero_digits(c)
+    pos = sorted(p for p, _ in digits)
+    assert all(b - a >= 2 for a, b in zip(pos, pos[1:]))
 
 
 def test_zero_weights_cost_nothing():
