@@ -18,19 +18,25 @@ from repro.configs.printed_mlp import PRINTED_MLPS
 from repro.core import batch_eval as BE
 from repro.core import minimize as MZ
 from repro.core.compression_spec import LayerMin, ModelMin
-from repro.core.ga import GAConfig, run_nsga2
+from repro.core.ga import (ARGMAX_LSB_CHOICES, CSD_DROP_CHOICES,
+                           LSB_CHOICES, GAConfig, run_nsga2)
 from repro.core.pareto import gain_at_loss, pareto_front
 
 
 def run(dataset: str = "whitewine", *, population=14, generations=7,
         epochs=90, seed=0, cache_dir: Optional[str] = None,
-        netlist: bool = False) -> Dict:
+        netlist: bool = False, approx: bool = False) -> Dict:
     """``netlist=True`` scores accuracy on the bit-exact simulation of each
     candidate's compiled circuit (`repro.circuit`) instead of the float
-    emulation of the bespoke arithmetic."""
+    emulation of the bespoke arithmetic. ``approx=True`` additionally lets
+    the GA search the circuit-approximation genes (`repro.approx`:
+    truncated-CSD coefficients, accumulator LSB truncation) and forces
+    netlist-exact accuracy so exact and approximated candidates compete on
+    the same simulated-datapath objective."""
     cfg = PRINTED_MLPS[dataset]
     base = MZ.baseline(cfg)
     n_layers = len(cfg.layer_dims) - 1
+    netlist = netlist or approx
 
     cache = (BE.EvalCache(f"{cache_dir}/{dataset}_evals.json")
              if cache_dir else None)
@@ -47,9 +53,19 @@ def run(dataset: str = "whitewine", *, population=14, generations=7,
              ModelMin.uniform(n_layers, bits=3, sparsity=0.3, input_bits=ib),
              ModelMin.uniform(n_layers, bits=4, sparsity=0.4, clusters=8,
                               input_bits=ib)]
-    res = run_nsga2(n_layers, None,
-                    GAConfig(population=population, generations=generations,
-                             seed=seed, input_bits=cfg.input_bits),
+    ga_cfg = GAConfig(population=population, generations=generations,
+                      seed=seed, input_bits=cfg.input_bits)
+    if approx:
+        import dataclasses
+        ga_cfg = dataclasses.replace(ga_cfg,
+                                     csd_drop_choices=CSD_DROP_CHOICES,
+                                     lsb_choices=LSB_CHOICES,
+                                     argmax_lsb_choices=ARGMAX_LSB_CHOICES)
+        # warm-start the approximation axis from the minimized seed
+        seeds.append(ModelMin.uniform(n_layers, bits=4, sparsity=0.4,
+                                      clusters=8, csd_drop=1, lsb=2,
+                                      input_bits=ib))
+    res = run_nsga2(n_layers, None, ga_cfg,
                     seed_specs=seeds, batch_evaluate=batch_evaluate)
     pts = [(1.0 - o[0], o[1]) for o in res.objectives]
     gain = gain_at_loss(pts, baseline_acc=base.accuracy,
@@ -69,6 +85,7 @@ def run(dataset: str = "whitewine", *, population=14, generations=7,
         "pareto_front": front,
         "history": res.history,
         "n_evaluations": len(res.evaluations),
+        "evaluations": res.evaluations,      # spec json -> objective tuple
     }
 
 

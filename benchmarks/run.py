@@ -8,6 +8,7 @@ benches. Prints ``name,us_per_call,derived`` CSV summaries at the end.
   roofline_table  — §Roofline across all dry-run cells
   ga_bench        — GA hot path: serial vs batched population evaluation
   circuit_bench   — bespoke netlist compile / bit-exact sim / delay
+  approx_bench    — budgeted circuit approximation + approximation-GA
 
 ``python -m benchmarks.run [--fast] [--only NAME]``
 """
@@ -16,8 +17,9 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import area_table, circuit_bench, dryrun_memory_table, \
-    fig1_standalone, fig2_combined, ga_bench, kernel_bench, roofline_table
+from benchmarks import approx_bench, area_table, circuit_bench, \
+    dryrun_memory_table, fig1_standalone, fig2_combined, ga_bench, \
+    kernel_bench, roofline_table
 
 BENCHES = [
     ("area_table", area_table.main),
@@ -28,6 +30,7 @@ BENCHES = [
     ("dryrun_memory_table", dryrun_memory_table.main),
     ("ga_bench", ga_bench.main),
     ("circuit_bench", circuit_bench.main),
+    ("approx_bench", approx_bench.main),
 ]
 
 

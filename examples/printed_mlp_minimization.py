@@ -108,6 +108,22 @@ def main(argv=None):
     print(f"netlist-exact accuracy: {acc_exact:.3f} "
           f"(float emulation: {MZ.compiled_accuracy(compiled, xte, yte):.3f})")
     print(f"structural cost == analytic hw_model: {cv['ok']}")
+
+    # -- 6. approximate the circuit itself under an error budget ----------
+    # beyond minimization: the approx pass pipeline (truncated-CSD
+    # coefficients, accumulator LSB truncation, comparator narrowing)
+    # greedily trades PROVEN worst-case logit error for area
+    from repro import approx
+    budget = approx.logit_budget(net, 0.01)       # 1% of the logit range
+    _, anet, rep = approx.fit_budget(net, budget)
+    acc_approx = circuit.netlist_accuracy(anet, compiled, xte, yte)
+    asc = circuit.structural_cost(anet)
+    print(f"\napproximated under a {budget}-LSB logit-error budget "
+          f"(proven bound: {rep.bound}):")
+    print(f"  knobs: {rep.params}")
+    print(f"  area {sc.area_mm2/100:.2f} -> {asc.area_mm2/100:.2f} cm2 "
+          f"({rep.area_gain:.2f}x on top of minimization), "
+          f"accuracy {acc_exact:.3f} -> {acc_approx:.3f}")
     return res
 
 

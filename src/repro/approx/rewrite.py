@@ -1,0 +1,133 @@
+"""Pass framework over the netlist IR: rebuild walks + the PassManager.
+
+A netlist is immutable-in-spirit (flat topo-ordered ids), so transforms are
+expressed as a *rebuild*: walk the old nodes in order, keep an old->new id
+map, and let a pass's rewriter intercept any node — returning a replacement
+node id built with fresh builder calls (intervals and therefore widths are
+re-derived by construction), or ``None`` to copy the node verbatim.
+Downstream nodes see replacements through the map; orphaned subgraphs are
+swept by a final dead-code rebuild. The classifier bookkeeping
+(``layer_pre_ids`` / ``output_ids`` / ``argmax_id``) is remapped, so the
+simulator and cost model work on transformed netlists unchanged.
+
+Invariants every pass must preserve (DESIGN.md §4c):
+
+* topological order (guaranteed by construction — rewriters only reference
+  mapped, already-emitted nodes);
+* one bias-add pre node per neuron, ``output_ids == layer_pre_ids[-1]``;
+* role/layer/unit tags consistent with the microarchitecture the node
+  implements (the cost model prices tags + topology, nothing else);
+* any deviation from the exact reference semantics is declared, either
+  structurally (TRUNC's intrinsic error) or via the node's local
+  ``err_lo/err_hi`` annotation — `approx.analyze` must be able to bound
+  the transformed circuit's worst-case logit error.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.circuit import ir
+
+# rewriter(new_net, old_net, node, old_to_new_map) -> new id | None (= copy)
+Rewriter = Callable[[ir.Netlist, ir.Netlist, ir.Node, Dict[int, int]],
+                    Optional[int]]
+
+
+def copy_node(new: ir.Netlist, n: ir.Node, m: Dict[int, int]) -> int:
+    """Emit a verbatim copy of ``n`` into ``new`` with remapped args.
+    Intervals are re-derived by the builders; tags, the product-root flag
+    and local error annotations are preserved."""
+    tags = dict(role=n.role, layer=n.layer, unit=n.unit)
+    if n.op == ir.Op.CONST:
+        nid = new.const(n.value, **tags)
+    elif n.op == ir.Op.INPUT:
+        nid = new.input(n.unit[0])
+    elif n.op == ir.Op.SHL:
+        nid = new.shl(m[n.args[0]], n.shift, **tags)
+    elif n.op == ir.Op.TRUNC:
+        nid = new.trunc(m[n.args[0]], n.shift, **tags)
+    elif n.op == ir.Op.ADD:
+        nid = new.add(m[n.args[0]], m[n.args[1]], **tags)
+    elif n.op == ir.Op.SUB:
+        nid = new.sub(m[n.args[0]], m[n.args[1]], **tags)
+    elif n.op == ir.Op.NEG:
+        nid = new.neg(m[n.args[0]], **tags)
+    elif n.op == ir.Op.RELU:
+        nid = new.relu(m[n.args[0]], **tags)
+    elif n.op == ir.Op.ARGMAX:
+        nid = new.argmax([m[a] for a in n.args])
+    else:                                        # pragma: no cover
+        raise ValueError(f"unknown op {n.op}")
+    node = new.nodes[nid]
+    node.product_root = node.product_root or n.product_root
+    node.err_lo += n.err_lo
+    node.err_hi += n.err_hi
+    return nid
+
+
+def live_set(net: ir.Netlist) -> set:
+    """Nodes reachable from the classifier's observation points (argmax,
+    logits, every layer's pre-activations) plus every ADC input lane (the
+    physical interface exists whether or not a weight survives)."""
+    live = set()
+    stack: List[int] = list(net.input_ids)
+    if net.argmax_id is not None:
+        stack.append(net.argmax_id)
+    for layer in net.layer_pre_ids:
+        stack.extend(layer)
+    stack.extend(net.output_ids)
+    while stack:
+        i = stack.pop()
+        if i in live:
+            continue
+        live.add(i)
+        stack.extend(net.nodes[i].args)
+    return live
+
+
+def rebuild(net: ir.Netlist, rewriter: Optional[Rewriter] = None, *,
+            dce: bool = False) -> ir.Netlist:
+    """One rebuild walk. With ``dce`` dead nodes are skipped (INPUT nodes
+    are always kept — they are the ADC interface). The result is validated."""
+    new = ir.Netlist(in_bits=net.in_bits, w_bits=list(net.w_bits))
+    keep = live_set(net) if dce else None
+    m: Dict[int, int] = {}
+    for n in net.nodes:
+        if keep is not None and n.id not in keep:
+            continue
+        nid = rewriter(new, net, n, m) if rewriter is not None else None
+        if nid is None:
+            nid = copy_node(new, n, m)
+        m[n.id] = nid
+    new.layer_pre_ids = [[m[i] for i in layer] for layer in net.layer_pre_ids]
+    new.output_ids = [m[i] for i in net.output_ids]
+    new.validate()
+    return new
+
+
+class Pass:
+    """One composable netlist transform. Subclasses implement ``run``
+    (usually a single `rebuild` with a rewriter)."""
+
+    name = "pass"
+
+    def run(self, net: ir.Netlist) -> ir.Netlist:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"<{type(self).__name__}>"
+
+
+class PassManager:
+    """Applies ordered passes, then one dead-code rebuild that compacts the
+    netlist and re-validates it. With an empty pass list the result is
+    semantically identical to the input: bit-exact simulation and exactly
+    the same structural cost (the PR 3 invariants — tested)."""
+
+    def __init__(self, passes: Sequence[Pass] = ()):
+        self.passes = list(passes)
+
+    def run(self, net: ir.Netlist) -> ir.Netlist:
+        for p in self.passes:
+            net = p.run(net)
+        return rebuild(net, dce=True)

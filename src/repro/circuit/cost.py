@@ -14,6 +14,13 @@ What the netlist adds beyond the analytic model is *delay*: the critical
 path in adder stages (`ir.Netlist.depths`), which the coefficient
 statistics cannot see — it depends on how deep the shift-add chains and
 adder trees actually compose.
+
+The pricing is also *approximation-aware* (`repro.approx`): a ``TRUNC``
+node is free wiring, and an adder/comparator whose operands provably carry
+k zeroed low bits (only an explicit TRUNC chain establishes this — never
+structural trailing zeros, so exact netlists price exactly as before)
+costs k fewer full-adder equivalents. Truncated-CSD multipliers get
+cheaper automatically: fewer digits means fewer mult-tagged SHL wires.
 """
 from __future__ import annotations
 
@@ -78,19 +85,46 @@ class StructuralCost:
         return 1e3 / max(self.delay_ms, 1e-9)
 
 
+def _trunc_levels(net: ir.Netlist) -> List[int]:
+    """Guaranteed zeroed low bits per node, established ONLY by explicit
+    TRUNC nodes (never by structural trailing zeros — a power-of-two
+    product is still priced at full width, preserving exact agreement with
+    `hw_model` on unapproximated netlists). TRUNC sets/extends the level;
+    ADD/SUB keep the min of their operands (a sum of multiples of 2^k is a
+    multiple of 2^k); NEG/RELU preserve it; everything else resets to 0."""
+    tz = [0] * len(net.nodes)
+    for n in net.nodes:
+        if n.op == ir.Op.TRUNC:
+            tz[n.id] = max(tz[n.args[0]], n.shift)
+        elif n.op in (ir.Op.ADD, ir.Op.SUB):
+            tz[n.id] = min(tz[a] for a in n.args)
+        elif n.op in (ir.Op.NEG, ir.Op.RELU):
+            tz[n.id] = tz[n.args[0]]
+    return tz
+
+
 def structural_cost(net: ir.Netlist) -> StructuralCost:
     """Price the netlist from its structure alone (node/edge counts +
-    the analytic model's width conventions)."""
+    the analytic model's width conventions). Approximation-aware: TRUNC
+    nodes are free, and gates downstream of a TRUNC chain are priced at
+    their narrowed width (see `_trunc_levels`)."""
     L = net.n_layers
     n_mult = [0] * L
     csd = [0] * L
     adders = [0] * L
+    adder_fa = [0.0] * L
     relus = [0] * L
     # operand count per (layer, neuron): product edges into the tree/bias
     operands: List[Dict[int, int]] = [dict() for _ in range(L)]
-    is_product_root = [n.product_root for n in net.nodes]
+    # a tree operand is a product root, possibly seen through TRUNC wiring
+    reaches_root = [False] * len(net.nodes)
+    for n in net.nodes:
+        reaches_root[n.id] = n.product_root or (
+            n.op == ir.Op.TRUNC and reaches_root[n.args[0]])
+    tz = _trunc_levels(net)
 
     for n in net.nodes:
+        pw = net.in_bits + net.w_bits[n.layer] if 0 <= n.layer < L else 0
         if n.role == ir.ROLE_MULT:
             if n.product_root:
                 n_mult[n.layer] += 1
@@ -99,11 +133,17 @@ def structural_cost(net: ir.Netlist) -> StructuralCost:
         elif n.role in (ir.ROLE_TREE, ir.ROLE_BIAS):
             if n.op in (ir.Op.ADD, ir.Op.SUB):
                 adders[n.layer] += 1
+                disc = min(tz[a] for a in n.args)
+                adder_fa[n.layer] += float(max(pw - disc, 1))
             k = n.unit[0]
             ops = operands[n.layer]
             ops[k] = ops.get(k, 0) + sum(
-                1 for a in n.args if is_product_root[a])
+                1 for a in n.args if reaches_root[a])
         elif n.role == ir.ROLE_RELU:
+            # no width discount here: a ReLU's operand is the bias add,
+            # and the hardwired bias constant restores full width (its
+            # trunc level is 0 by definition), so truncation upstream in
+            # the tree can never narrow the comparator
             relus[n.layer] += 1
 
     layers = []
@@ -111,19 +151,22 @@ def structural_cost(net: ir.Netlist) -> StructuralCost:
         prod_width = net.in_bits + net.w_bits[i]
         max_ops = max(operands[i].values(), default=0)
         acc_w = prod_width + math.ceil(math.log2(max(max_ops, 2)))
+        act_fa = relus[i] * HW.RELU_FA_EQ * acc_w
         layers.append(StructuralLayerCost(
             n_multipliers=n_mult[i],
             csd_digits=csd[i],
             n_adders=adders[i],
             max_operands=max_ops,
             mult_fa=float(csd[i] * prod_width) * HW.MULT_ROUTING_FACTOR,
-            adder_fa=float(adders[i] * prod_width),
-            act_fa=relus[i] * HW.RELU_FA_EQ * acc_w))
+            adder_fa=adder_fa[i],
+            act_fa=act_fa))
 
     am = net.nodes[net.argmax_id] if net.argmax_id is not None else None
     n_logits = len(am.args) if am is not None else 0
-    argmax_fa = (max(n_logits - 1, 0) * HW.ARGMAX_FA_EQ
-                 * (net.in_bits + net.w_bits[-1] + 4))
+    am_w = net.in_bits + net.w_bits[-1] + 4
+    if am is not None and am.args:
+        am_w = max(am_w - min(tz[a] for a in am.args), 1)
+    argmax_fa = max(n_logits - 1, 0) * HW.ARGMAX_FA_EQ * am_w
     return StructuralCost(layers, argmax_fa, net.critical_path_levels())
 
 

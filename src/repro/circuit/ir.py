@@ -21,6 +21,17 @@ Ops
 ``NEG``     two's-complement negate (inverter row + carry-in)
 ``RELU``    comparator + mux against zero
 ``ARGMAX``  comparator tree over the class logits -> class index
+``TRUNC``   drop the ``shift`` low bits: (a >> k) << k. Free wiring (the low
+            wires are simply not connected); downstream adders narrow by k.
+            Only the approximation passes (`repro.approx`) emit it.
+
+Approximation bookkeeping: a node may carry a *local* error interval
+``[err_lo, err_hi]`` — the worst-case deviation a rewrite pass introduced AT
+this node relative to the exact reference circuit (e.g. a rounded
+multiplier coefficient). `repro.approx.analyze` propagates these local
+intervals (plus TRUNC's intrinsic ``[-(2^k - 1), 0]``) through the graph
+into per-logit worst-case bounds. Exact netlists carry ``(0, 0)``
+everywhere.
 
 Roles tag each node with its microarchitectural home (``mult`` — inside a
 constant multiplier, ``tree`` — adder tree, ``bias`` — bias add, ``relu``,
@@ -45,6 +56,7 @@ class Op(enum.IntEnum):
     NEG = 5
     RELU = 6
     ARGMAX = 7
+    TRUNC = 8
 
 
 # roles a node can play in the bespoke microarchitecture
@@ -80,6 +92,8 @@ class Node:
     layer: int = -1                   # owning layer (-1: input / argmax)
     unit: Tuple[int, ...] = ()        # neuron k, or (row j, cluster m)
     product_root: bool = False        # root of one bespoke multiplier subnet
+    err_lo: int = 0                   # local approximation error introduced
+    err_hi: int = 0                   # at this node (0/0 for exact nodes)
 
     @property
     def width(self) -> int:
@@ -154,6 +168,19 @@ class Netlist:
         return self._add(Node(len(self.nodes), Op.NEG, (a,),
                               lo=-n.hi, hi=-n.lo, **tags))
 
+    def trunc(self, a: int, shift: int, **tags) -> int:
+        """Drop the ``shift`` low bits of ``a``: (a >> shift) << shift with
+        arithmetic (floor) semantics. shift == 0 is the identity and emits
+        no node. Free wiring — the approximation passes use it to narrow
+        downstream adders/comparators."""
+        if shift <= 0:
+            return a
+        n = self.nodes[a]
+        return self._add(Node(len(self.nodes), Op.TRUNC, (a,),
+                              shift=int(shift),
+                              lo=(n.lo >> shift) << shift,
+                              hi=(n.hi >> shift) << shift, **tags))
+
     def relu(self, a: int, **tags) -> int:
         n = self.nodes[a]
         return self._add(Node(len(self.nodes), Op.RELU, (a,),
@@ -180,7 +207,7 @@ class Netlist:
         return max(n.width for n in self.nodes)
 
     def depths(self) -> List[int]:
-        """Adder-stage depth per node: SHL/CONST/INPUT are wires (+0);
+        """Adder-stage depth per node: SHL/TRUNC/CONST/INPUT are wires (+0);
         ADD/SUB/NEG/RELU are one gate stage (+1); ARGMAX is a comparator
         tree, ceil(log2(#logits)) stages. The max over the netlist is the
         critical-path length in full-adder-stage delays."""

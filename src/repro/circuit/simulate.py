@@ -42,6 +42,11 @@ class SimPlan:
     steps: Tuple[_Step, ...]
     pre_ids: Tuple[np.ndarray, ...]   # per-layer integer pre-activations
     output_ids: np.ndarray
+    # the ARGMAX node's actual operands: equal to output_ids on exact
+    # netlists, but approximation passes may interpose comparator-input
+    # TRUNC nodes — the decision must be taken over what the printed
+    # comparator tree actually sees
+    argmax_ids: np.ndarray
     max_width: int
 
 
@@ -62,7 +67,7 @@ def build_plan(net: ir.Netlist) -> SimPlan:
         for op, ids in sorted(by_op.items()):
             nodes = [net.nodes[i] for i in ids]
             a = np.array([n.args[0] for n in nodes], np.int32)
-            if op == ir.Op.SHL:
+            if op in (ir.Op.SHL, ir.Op.TRUNC):
                 b = np.array([n.shift for n in nodes], np.int32)
             elif op in (ir.Op.ADD, ir.Op.SUB):
                 b = np.array([n.args[1] for n in nodes], np.int32)
@@ -71,18 +76,23 @@ def build_plan(net: ir.Netlist) -> SimPlan:
             steps.append(_Step(op, np.array(ids, np.int32), a, b))
     cid = np.array([c[0] for c in consts], np.int32)
     cval = np.array([c[1] for c in consts], np.int64)
+    am = (net.nodes[net.argmax_id].args if net.argmax_id is not None
+          else net.output_ids)
     return SimPlan(
         n_nodes=len(net), const_ids=cid, const_vals=cval,
         input_ids=np.array(net.input_ids, np.int32),
         steps=tuple(steps),
         pre_ids=tuple(np.array(p, np.int32) for p in net.layer_pre_ids),
         output_ids=np.array(net.output_ids, np.int32),
+        argmax_ids=np.array(am, np.int32),
         max_width=net.max_width)
 
 
-def _evaluate(plan: SimPlan, x: jnp.ndarray, dtype) -> List[jnp.ndarray]:
-    """One sample through the plan. x: (n_inputs,) int. Returns per-layer
-    pre-activation vectors (the dataflow is pure integer throughout)."""
+def _evaluate(plan: SimPlan, x: jnp.ndarray, dtype
+              ) -> Tuple[List[jnp.ndarray], jnp.ndarray]:
+    """One sample through the plan. x: (n_inputs,) int. Returns (per-layer
+    pre-activation vectors, the argmax comparator's operand vector) — the
+    dataflow is pure integer throughout."""
     vals = jnp.zeros(plan.n_nodes, dtype)
     vals = vals.at[plan.const_ids].set(plan.const_vals.astype(dtype))
     vals = vals.at[plan.input_ids].set(x.astype(dtype))
@@ -90,6 +100,10 @@ def _evaluate(plan: SimPlan, x: jnp.ndarray, dtype) -> List[jnp.ndarray]:
         a = vals[s.a]
         if s.op == ir.Op.SHL:
             r = jnp.left_shift(a, s.b.astype(dtype))
+        elif s.op == ir.Op.TRUNC:
+            # arithmetic shift right then left: floor-truncate the low bits
+            k = s.b.astype(dtype)
+            r = jnp.left_shift(jnp.right_shift(a, k), k)
         elif s.op == ir.Op.ADD:
             r = a + vals[s.b]
         elif s.op == ir.Op.SUB:
@@ -99,7 +113,7 @@ def _evaluate(plan: SimPlan, x: jnp.ndarray, dtype) -> List[jnp.ndarray]:
         else:                         # RELU
             r = jnp.maximum(a, 0)
         vals = vals.at[s.out].set(r)
-    return [vals[p] for p in plan.pre_ids]
+    return [vals[p] for p in plan.pre_ids], vals[plan.argmax_ids]
 
 
 class Simulator:
@@ -118,8 +132,11 @@ class Simulator:
         dtype = jnp.int64 if self._x64 else jnp.int32
 
         def batch(x):                 # x: (B, n_inputs)
-            pres = jax.vmap(lambda row: _evaluate(self.plan, row, dtype))(x)
-            return pres, jnp.argmax(pres[-1], axis=-1)
+            pres, amx = jax.vmap(
+                lambda row: _evaluate(self.plan, row, dtype))(x)
+            # decide over what the comparator tree actually sees (its
+            # inputs may be truncated by the approximation passes)
+            return pres, jnp.argmax(amx, axis=-1)
 
         with self._scope():
             self._fn = jax.jit(batch)

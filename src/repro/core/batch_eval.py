@@ -181,20 +181,43 @@ def _population_finetune(params0, bits, ks, masks, x, y, *,
 
 
 class EvalCache:
-    """Append-only on-disk cache of spec evaluations.
+    """On-disk cache of spec evaluations with a bounded footprint.
 
     One JSON file, atomically replaced on flush; keys are
     "dataset|seed=S|epochs=E|spec.to_json()" (suffixed "|netlist" for
     netlist-exact evaluations — a different objective, never mixed with
-    analytic entries) so resumed searches, repeated sweeps and the
-    serial/batched paths all share results. ``flush`` re-reads and merges
-    the on-disk file first, so concurrent sweep processes sharing a cache
-    file union their entries instead of clobbering each other.
+    analytic entries; approximated specs carry their genes in the spec
+    JSON and always live in the netlist keyspace) so resumed searches,
+    repeated sweeps and the serial/batched paths all share results.
+    ``flush`` re-reads and merges the on-disk file first, so concurrent
+    sweep processes sharing a cache file union their entries instead of
+    clobbering each other.
+
+    ``max_entries`` caps the cache: every get/put stamps the entry with a
+    monotonic access counter, and flush evicts the least-recently-used
+    entries beyond the cap — a month of GA sweeps can't grow the file
+    without bound. Entries written by pre-cap versions carry no stamp and
+    are evicted first. A flush with no new entries and few refreshed
+    stamps is a cheap no-op (recency persistence is batched every
+    ``TOUCH_FLUSH_EVERY`` hits), so warm fully-cached sweeps don't rewrite
+    a multi-MB JSON per generation.
     """
 
-    def __init__(self, path):
+    TOUCH_FLUSH_EVERY = 64
+
+    def __init__(self, path, max_entries: Optional[int] = 100_000):
         self.path = Path(path)
+        self.max_entries = max_entries
         self._data: Dict[str, Dict] = self._read()
+        self._clock = max((int(e.get("t", 0))
+                           for e in self._data.values()), default=0)
+        self._dirty = False           # un-persisted put()s
+        self._touched = 0             # un-persisted recency stamps
+
+    def _touch(self, entry: Dict) -> Dict:
+        self._clock += 1
+        entry["t"] = self._clock
+        return entry
 
     def _read(self) -> Dict[str, Dict]:
         if not self.path.exists():
@@ -223,6 +246,8 @@ class EvalCache:
         d = self._data.get(self.key(dataset, seed, epochs, spec, netlist))
         if d is None:
             return None
+        self._touch(d)                  # LRU: a hit keeps the entry young
+        self._touched += 1
         return MZ.EvalResult(ModelMin.from_json(d["spec"]), d["accuracy"],
                              d["area_mm2"], d["power_mw"],
                              d["n_multipliers"],
@@ -230,14 +255,20 @@ class EvalCache:
 
     def put(self, dataset: str, seed: int, epochs: int,
             r: MZ.EvalResult, netlist: bool = False) -> None:
-        self._data[self.key(dataset, seed, epochs, r.spec, netlist)] = {
-            "spec": r.spec.to_json(), "accuracy": float(r.accuracy),
-            "area_mm2": float(r.area_mm2), "power_mw": float(r.power_mw),
-            "n_multipliers": int(r.n_multipliers),
-            "delay_levels": (None if r.delay_levels is None
-                             else int(r.delay_levels))}
+        self._data[self.key(dataset, seed, epochs, r.spec, netlist)] = \
+            self._touch({
+                "spec": r.spec.to_json(), "accuracy": float(r.accuracy),
+                "area_mm2": float(r.area_mm2), "power_mw": float(r.power_mw),
+                "n_multipliers": int(r.n_multipliers),
+                "delay_levels": (None if r.delay_levels is None
+                                 else int(r.delay_levels))})
+        self._dirty = True
 
     def flush(self) -> None:
+        # nothing new and too few refreshed stamps to be worth a full
+        # re-read/merge/rewrite: skip (recency persistence is best-effort)
+        if not self._dirty and self._touched < self.TOUCH_FLUSH_EVERY:
+            return
         self.path.parent.mkdir(parents=True, exist_ok=True)
         # merge concurrent writers under an flock'd sidecar: entries
         # flushed by another process since our last read survive; on a key
@@ -255,12 +286,21 @@ class EvalCache:
             if disk:
                 disk.update(self._data)
                 self._data = disk
+            if (self.max_entries is not None
+                    and len(self._data) > self.max_entries):
+                # LRU-ish eviction: keep the most recently stamped entries
+                keep = sorted(self._data.items(),
+                              key=lambda kv: int(kv[1].get("t", 0)),
+                              reverse=True)[:self.max_entries]
+                self._data = dict(keep)
             fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
                                        prefix=self.path.name + ".")
             try:
                 with os.fdopen(fd, "w") as f:
                     json.dump(self._data, f)
                 os.replace(tmp, self.path)    # atomic publish
+                self._dirty = False
+                self._touched = 0
             except BaseException:
                 os.unlink(tmp)
                 raise
@@ -279,23 +319,29 @@ def _compile_and_price(params_pop, specs, masks_serial, xte, yte, *,
     with ``netlist=True`` the accuracy objective is the netlist-exact
     simulation of the printed datapath instead of the float emulation
     (area/power stay on the analytic pricing, which the structural netlist
-    cost is tested to reproduce exactly)."""
+    cost is tested to reproduce exactly).
+
+    Candidates carrying approximation genes (`ModelMin.has_approx`) are
+    scored by `approx.evaluate_netlist` — the one shared policy with the
+    serial path: bit-exact simulation of the *approximated* netlist for
+    accuracy, approximation-aware structural pricing for area/power (the
+    analytic model cannot see truncated circuits)."""
+    from repro import approx as AX               # lazy: approx imports us
     from repro import circuit as CIRC            # lazy: circuit imports us
     compiled = []
     for p, spec in enumerate(specs):
         params_p = jax.tree_util.tree_map(lambda a: a[p], params_pop)
         compiled.append(MZ.compile_bespoke(params_p, spec, masks_serial[p]))
     nets = [CIRC.compile_netlist(c) for c in compiled]
+    approx_res = {p: AX.evaluate_netlist(nets[p], compiled[p], spec,
+                                         xte, yte)
+                  for p, spec in enumerate(specs) if spec.has_approx}
     delays = [n.critical_path_levels() for n in nets]
 
-    if netlist:
-        # exact integer evaluation of the materialized circuit
-        accs = [CIRC.netlist_accuracy(n, c, xte, yte)
-                for n, c in zip(nets, compiled)]
-    else:
-        # accuracy of the exact bespoke arithmetic, per candidate
-        # (cheap numpy float emulation)
-        accs = [MZ.compiled_accuracy(c, xte, yte) for c in compiled]
+    accs = [None if s.has_approx                 # scored in approx_res
+            else CIRC.netlist_accuracy(n, c, xte, yte) if netlist
+            else MZ.compiled_accuracy(c, xte, yte)   # exact float emulation
+            for n, c, s in zip(nets, compiled, specs)]
 
     # stack per-layer integer weights / codebooks and price the whole
     # population in one hw_model call (pad codebooks to the layer's max k)
@@ -323,10 +369,11 @@ def _compile_and_price(params_pop, specs, masks_serial, xte, yte, *,
     cost = HW.mlp_cost_batch(q_layers, w_bits=w_bits, in_bits=in_bits,
                              clusters=clusters)
 
-    return [MZ.EvalResult(spec, accs[p], float(cost["area_mm2"][p]),
-                          float(cost["power_mw"][p]),
-                          int(cost["n_multipliers"][p]),
-                          delay_levels=delays[p])
+    return [approx_res[p] if p in approx_res
+            else MZ.EvalResult(spec, accs[p], float(cost["area_mm2"][p]),
+                               float(cost["power_mw"][p]),
+                               int(cost["n_multipliers"][p]),
+                               delay_levels=delays[p])
             for p, spec in enumerate(specs)]
 
 
@@ -341,18 +388,25 @@ def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
     ``netlist=True`` switches the accuracy objective to the bit-exact
     simulation of each candidate's compiled netlist (`repro.circuit`) —
     the printed datapath itself, integer biases and all — cached under a
-    separate key space.
+    separate key space. Specs with approximation genes are always scored
+    on their simulated approximated netlist and priced structurally,
+    whatever ``netlist`` says; they live in the netlist keyspace (their
+    genes are part of the spec JSON, so they can never collide with an
+    exact entry).
     """
     specs = list(specs)
     results: Dict[str, MZ.EvalResult] = {}
     todo: List[ModelMin] = []
     queued = set()
+    n_hits = 0
     for s in specs:
         k = s.to_json()
         if k in results or k in queued:
             continue
-        hit = (cache.get(cfg.name, seed, epochs, s, netlist=netlist)
+        hit = (cache.get(cfg.name, seed, epochs, s,
+                         netlist=netlist or s.has_approx)
                if cache else None)
+        n_hits += hit is not None
         if hit is not None and hit.delay_levels is not None:
             # entries from caches predating the circuit compiler carry no
             # delay — fall through and re-evaluate so they upgrade in place
@@ -381,9 +435,16 @@ def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
                                     xte, yte, netlist=netlist):
             results[r.spec.to_json()] = r
             if cache is not None:
-                cache.put(cfg.name, seed, epochs, r, netlist=netlist)
-        if cache is not None:
-            cache.flush()
+                cache.put(cfg.name, seed, epochs, r,
+                          netlist=netlist or r.spec.has_approx)
+
+    # flush on hits too: a get() refreshes the entry's LRU stamp, and a
+    # long fully-cached resume must persist that recency or a capped
+    # writer would evict exactly the entries this sweep is actively
+    # reusing (the cache itself batches recency-only writes, so a warm
+    # generation is not a multi-MB rewrite)
+    if cache is not None and (todo or n_hits):
+        cache.flush()
 
     return [results[s.to_json()] for s in specs]
 
@@ -402,6 +463,9 @@ def make_batch_evaluator(cfg: PrintedMLPConfig, *, epochs: int = 150,
     circuit's critical path as a third minimized objective. ``record``, if
     given, collects every EvalResult by spec json — callers (fig2, the
     example) read Pareto-front delay out of it without re-evaluating.
+    Specs carrying approximation genes are handled per candidate by
+    `evaluate_population` (simulated approximate netlist + structural
+    pricing) whatever ``netlist`` says.
     """
     def batch_evaluate(specs: Sequence[ModelMin]):
         rs = evaluate_population(cfg, specs, epochs=epochs, seed=seed,

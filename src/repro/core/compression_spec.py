@@ -28,38 +28,70 @@ class LayerMin:
     bits: Optional[int] = None         # None = full precision
     sparsity: float = 0.0
     clusters: Optional[int] = None     # None = no clustering
+    # circuit-approximation genes (repro.approx; 0 = exact):
+    csd_drop: int = 0                  # CSD digits dropped per multiplier
+    lsb: int = 0                       # low bits truncated off accum trees
 
     def validate(self):
         assert self.bits is None or 2 <= self.bits <= 8, self.bits
         assert 0.0 <= self.sparsity <= 0.9, self.sparsity
         assert self.clusters is None or 2 <= self.clusters <= 64
+        assert 0 <= self.csd_drop <= 8, self.csd_drop
+        assert 0 <= self.lsb <= 16, self.lsb
 
 
 @dataclasses.dataclass(frozen=True)
 class ModelMin:
     layers: Tuple[LayerMin, ...]
     input_bits: int = 8
+    argmax_lsb: int = 0                # argmax comparator-input truncation
 
     def validate(self):
         for l in self.layers:
             l.validate()
+        assert 0 <= self.argmax_lsb <= 16, self.argmax_lsb
+
+    @property
+    def has_approx(self) -> bool:
+        """Any circuit-approximation gene active — such specs must be
+        priced structurally and scored on the simulated netlist (the
+        analytic model and the float emulation describe the exact
+        circuit, which is no longer what gets printed)."""
+        return bool(self.argmax_lsb
+                    or any(l.csd_drop or l.lsb for l in self.layers))
 
     def to_json(self) -> str:
-        return json.dumps({
-            "input_bits": self.input_bits,
-            "layers": [dataclasses.asdict(l) for l in self.layers]})
+        # approximation genes are serialized only when active, so every
+        # exact spec keeps its historical JSON byte-for-byte (EvalCache
+        # keys embed this string — old caches stay valid)
+        layers = []
+        for l in self.layers:
+            d = {"bits": l.bits, "sparsity": l.sparsity,
+                 "clusters": l.clusters}
+            if l.csd_drop:
+                d["csd_drop"] = l.csd_drop
+            if l.lsb:
+                d["lsb"] = l.lsb
+            layers.append(d)
+        out = {"input_bits": self.input_bits, "layers": layers}
+        if self.argmax_lsb:
+            out["argmax_lsb"] = self.argmax_lsb
+        return json.dumps(out)
 
     @staticmethod
     def from_json(s: str) -> "ModelMin":
         d = json.loads(s)
         return ModelMin(tuple(LayerMin(**l) for l in d["layers"]),
-                        d["input_bits"])
+                        d["input_bits"], d.get("argmax_lsb", 0))
 
     @staticmethod
     def uniform(n_layers: int, *, bits=None, sparsity=0.0, clusters=None,
-                input_bits: int = 8) -> "ModelMin":
-        return ModelMin(tuple(LayerMin(bits, sparsity, clusters)
-                              for _ in range(n_layers)), input_bits)
+                csd_drop: int = 0, lsb: int = 0, input_bits: int = 8,
+                argmax_lsb: int = 0) -> "ModelMin":
+        return ModelMin(tuple(LayerMin(bits, sparsity, clusters, csd_drop,
+                                       lsb)
+                              for _ in range(n_layers)), input_bits,
+                        argmax_lsb)
 
 
 def qat_weight(w: jnp.ndarray, spec: LayerMin, mask=None) -> jnp.ndarray:

@@ -10,6 +10,13 @@ sorting/crowding are dimension-agnostic): the netlist-exact evaluator
 (`batch_eval.make_batch_evaluator(netlist=True, include_delay=True)`)
 adds the compiled circuit's critical-path delay as a third objective,
 which the analytic cost model cannot express.
+
+With ``csd_drop_choices`` / ``lsb_choices`` widened past ``(0,)`` the
+genome also carries circuit-approximation genes (`repro.approx`): the GA
+then trades bounded arithmetic error inside the bespoke netlist for area,
+on top of the paper's quant/prune/cluster axes. Approximated candidates
+are priced structurally and scored on the simulated approximate circuit
+(`batch_eval` switches per candidate automatically).
 """
 from __future__ import annotations
 
@@ -25,6 +32,12 @@ from repro.core.pareto import crowding_distance, non_dominated_sort
 BITS_CHOICES = (2, 3, 4, 5, 6, 7, 8)
 SPARSITY_CHOICES = (0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7)
 CLUSTER_CHOICES = (None, 2, 3, 4, 6, 8, 12, 16)
+# circuit-approximation genes (repro.approx). Off by default: the single
+# (0,) choice draws nothing from the RNG, so exact searches reproduce
+# their historical trajectories bit-for-bit.
+CSD_DROP_CHOICES = (0, 1, 2, 3)
+LSB_CHOICES = (0, 1, 2, 3, 4, 6)
+ARGMAX_LSB_CHOICES = (0, 2, 4, 6, 8)
 
 
 @dataclasses.dataclass
@@ -38,6 +51,18 @@ class GAConfig:
     bits_choices: Sequence = BITS_CHOICES
     sparsity_choices: Sequence = SPARSITY_CHOICES
     cluster_choices: Sequence = CLUSTER_CHOICES
+    # set to CSD_DROP_CHOICES / LSB_CHOICES / ARGMAX_LSB_CHOICES (or your
+    # own) to let the GA search bespoke-circuit approximation alongside
+    # quant/prune/cluster
+    csd_drop_choices: Sequence = (0,)
+    lsb_choices: Sequence = (0,)
+    argmax_lsb_choices: Sequence = (0,)   # model-level gene (one comparator)
+
+    @property
+    def approx_enabled(self) -> bool:
+        return tuple(self.csd_drop_choices) != (0,) \
+            or tuple(self.lsb_choices) != (0,) \
+            or tuple(self.argmax_lsb_choices) != (0,)
 
 
 @dataclasses.dataclass
@@ -49,31 +74,54 @@ class GAResult:
 
 
 def _random_gene(rng, cfg: GAConfig) -> LayerMin:
-    return LayerMin(bits=rng.choice(cfg.bits_choices),
-                    sparsity=rng.choice(cfg.sparsity_choices),
-                    clusters=rng.choice(cfg.cluster_choices))
+    g = LayerMin(bits=rng.choice(cfg.bits_choices),
+                 sparsity=rng.choice(cfg.sparsity_choices),
+                 clusters=rng.choice(cfg.cluster_choices))
+    if cfg.approx_enabled:               # extra draws only when searching
+        g = dataclasses.replace(g,
+                                csd_drop=rng.choice(cfg.csd_drop_choices),
+                                lsb=rng.choice(cfg.lsb_choices))
+    return g
 
 
 def _mutate(spec: ModelMin, rng, cfg: GAConfig) -> ModelMin:
+    fields = ["bits", "sparsity", "clusters"]
+    if cfg.approx_enabled:
+        fields += ["csd_drop", "lsb"]
     genes = list(spec.layers)
     for i, g in enumerate(genes):
         if rng.random() < cfg.mutation_prob:
-            field = rng.choice(["bits", "sparsity", "clusters"])
+            field = rng.choice(fields)
             if field == "bits":
                 genes[i] = dataclasses.replace(g, bits=rng.choice(cfg.bits_choices))
             elif field == "sparsity":
                 genes[i] = dataclasses.replace(
                     g, sparsity=rng.choice(cfg.sparsity_choices))
-            else:
+            elif field == "clusters":
                 genes[i] = dataclasses.replace(
                     g, clusters=rng.choice(cfg.cluster_choices))
-    return ModelMin(tuple(genes), spec.input_bits)
+            elif field == "csd_drop":
+                genes[i] = dataclasses.replace(
+                    g, csd_drop=rng.choice(cfg.csd_drop_choices))
+            else:
+                genes[i] = dataclasses.replace(
+                    g, lsb=rng.choice(cfg.lsb_choices))
+    argmax_lsb = spec.argmax_lsb
+    if cfg.approx_enabled and rng.random() < cfg.mutation_prob:
+        argmax_lsb = rng.choice(cfg.argmax_lsb_choices)
+    return ModelMin(tuple(genes), spec.input_bits, argmax_lsb)
 
 
 def _crossover(a: ModelMin, b: ModelMin, rng) -> ModelMin:
     genes = tuple(ga if rng.random() < 0.5 else gb
                   for ga, gb in zip(a.layers, b.layers))
-    return ModelMin(genes, a.input_bits)
+    # the model-level gene recombines 50/50 like the per-layer ones; the
+    # draw happens only when the parents disagree, so exact searches
+    # (argmax_lsb always 0) keep their historical RNG stream
+    am = a.argmax_lsb
+    if a.argmax_lsb != b.argmax_lsb and rng.random() < 0.5:
+        am = b.argmax_lsb
+    return ModelMin(genes, a.input_bits, am)
 
 
 def _tournament(idx_ranked: List[int], rng) -> int:
@@ -122,8 +170,13 @@ def run_nsga2(n_layers: int,
     input_bits = seed_specs[0].input_bits if seed_specs else cfg.input_bits
     pop: List[ModelMin] = list(seed_specs or [])
     while len(pop) < cfg.population:
-        pop.append(ModelMin(tuple(_random_gene(rng, cfg)
-                                  for _ in range(n_layers)), input_bits))
+        genes = tuple(_random_gene(rng, cfg) for _ in range(n_layers))
+        # the model-level gene is sampled at init like the per-layer ones
+        # (drawn only when approximation is searched: exact configs keep
+        # their historical RNG stream)
+        am = (rng.choice(cfg.argmax_lsb_choices) if cfg.approx_enabled
+              else 0)
+        pop.append(ModelMin(genes, input_bits, am))
     history = []
 
     for gen in range(cfg.generations):

@@ -260,12 +260,18 @@ def evaluate_spec(cfg: PrintedMLPConfig, spec: ModelMin, *,
     masks = make_masks(params0, spec)
     params = qat_finetune(params0, spec, masks, xtr, ytr, epochs=epochs)
     compiled = compile_bespoke(params, spec, masks)
+    from repro.circuit import compile as CC     # lazy: circuit imports us
+    net = CC.compile_netlist(compiled)
+    if spec.has_approx:
+        # the printed circuit is the approximated netlist — one shared
+        # scoring policy with the batched path (`approx.evaluate_netlist`)
+        from repro import approx as AX
+        return AX.evaluate_netlist(net, compiled, spec, xte, yte)
     acc = compiled_accuracy(compiled, xte, yte)
     cost = compiled_cost(compiled)
-    from repro.circuit import compile as CC     # lazy: circuit imports us
-    delay = CC.compile_netlist(compiled).critical_path_levels()
     return EvalResult(spec, acc, cost.area_mm2, cost.power_mw,
-                      cost.n_multipliers, delay_levels=delay)
+                      cost.n_multipliers,
+                      delay_levels=net.critical_path_levels())
 
 
 def evaluate_specs(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,

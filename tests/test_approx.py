@@ -1,0 +1,335 @@
+"""Approximation subsystem tests.
+
+The two acceptance invariants of the subsystem:
+
+* **Identity** — the PassManager with no passes (or all-zero knobs) yields
+  a netlist whose simulation is bit-exact against
+  `minimize.integer_forward` and whose structural cost equals
+  `hw_model.mlp_cost` exactly — the PR 3 invariants survive the rebuild
+  machinery.
+* **Soundness** — for every pass (alone and composed), the measured max
+  logit error on real inputs never exceeds the interval analyzer's
+  predicted bound: across all four UCI datasets and a randomized spec
+  sweep.
+"""
+import numpy as np
+import pytest
+
+from repro import approx, circuit
+from repro.circuit import ir
+from repro.configs.printed_mlp import PRINTED_MLPS
+from repro.core import hw_model as HW
+from repro.core import minimize as MZ
+from repro.core.compression_spec import LayerMin, ModelMin
+
+from test_circuit import (assert_bit_exact, assert_cost_matches,
+                          synth_compiled)
+
+RNG = np.random.default_rng(7)
+
+
+def _measured_ok(anet, compiled, x):
+    bound = approx.logit_error_bound(anet)
+    measured = approx.measured_max_logit_error(anet, compiled, x)
+    assert measured <= bound, (measured, bound)
+    return measured, bound
+
+
+# ---------------------------------------------------------------------------
+# identity: the rebuild machinery preserves the PR 3 invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dims,bits,sparsity,clusters", [
+    ((7, 8, 3), 8, 0.0, None),
+    ((11, 10, 7), 6, 0.5, None),
+    ((16, 20, 10), 8, 0.3, 8),
+    ((5, 6, 6, 4), 7, 0.2, 3),
+])
+def test_empty_passmanager_is_identity(dims, bits, sparsity, clusters):
+    c = synth_compiled(dims, bits, sparsity=sparsity, clusters=clusters,
+                       seed=11)
+    net = circuit.compile_netlist(c)
+    out = approx.PassManager([]).run(net)
+    x = RNG.random((13, dims[0])).astype(np.float32)
+    assert_bit_exact(out, c, x)
+    assert_cost_matches(out, c)
+    assert len(out) == len(net)
+    assert out.critical_path_levels() == net.critical_path_levels()
+
+
+def test_all_zero_knobs_are_identity():
+    c = synth_compiled((9, 8, 4), 5, sparsity=0.2, clusters=4, seed=3)
+    net = circuit.compile_netlist(c)
+    p = approx.ApproxParams.zero(net.n_layers)
+    assert p.is_identity
+    out = approx.approximate(net, p)
+    assert_bit_exact(out, c, RNG.random((9, 9)).astype(np.float32))
+    assert_cost_matches(out, c)
+    assert approx.logit_error_bound(out) == 0
+    assert approx.decision_error_bound(out) == 0
+
+
+def test_zero_gene_spec_json_is_byte_stable():
+    """Exact specs keep their historical JSON (EvalCache keys embed it)."""
+    s = ModelMin.uniform(2, bits=4, sparsity=0.3, clusters=8)
+    assert not s.has_approx
+    assert s.to_json() == (
+        '{"input_bits": 8, "layers": ['
+        '{"bits": 4, "sparsity": 0.3, "clusters": 8}, '
+        '{"bits": 4, "sparsity": 0.3, "clusters": 8}]}')
+    ax = ModelMin.uniform(2, bits=4, csd_drop=1, lsb=2, argmax_lsb=3)
+    assert ax.has_approx
+    assert ModelMin.from_json(ax.to_json()) == ax
+    assert ModelMin.from_json(s.to_json()) == s
+
+
+# ---------------------------------------------------------------------------
+# the TRUNC op
+# ---------------------------------------------------------------------------
+
+
+def test_trunc_ir_semantics_and_zero_shift():
+    net = ir.Netlist(in_bits=8, w_bits=[8])
+    x = net.input(0)
+    t = net.trunc(x, 3)
+    assert net.nodes[t].op == ir.Op.TRUNC
+    assert (net.nodes[t].lo, net.nodes[t].hi) == (0, (255 >> 3) << 3)
+    assert net.trunc(x, 0) == x           # identity emits no node
+    n = net.neg(x)                        # [-255, 0]
+    tn = net.trunc(n, 3)
+    assert (net.nodes[tn].lo, net.nodes[tn].hi) == ((-255 >> 3) << 3, 0)
+    # TRUNC is a wire in the delay model
+    assert net.depths()[t] == net.depths()[x]
+
+
+def test_trunc_simulation_floors_toward_minus_inf():
+    net = ir.Netlist(in_bits=4, w_bits=[4])
+    x = net.input(0)
+    m = net.sub(net.const(0), x)           # -x in [-15, 0]
+    net.layer_pre_ids.append([net.trunc(m, 2), net.trunc(x, 2)])
+    net.output_ids = list(net.layer_pre_ids[-1])
+    net.argmax(net.output_ids)
+    net.validate()
+    out = circuit.simulate(net, np.arange(16)[:, None])
+    vals = np.arange(16)
+    np.testing.assert_array_equal(out["pre"][0][:, 0], (-vals >> 2) << 2)
+    np.testing.assert_array_equal(out["pre"][0][:, 1], (vals >> 2) << 2)
+
+
+# ---------------------------------------------------------------------------
+# individual passes
+# ---------------------------------------------------------------------------
+
+
+def test_round_coeffs_truncates_to_canonical_subsets():
+    for c in list(range(-200, 201)) + [2 ** 17 - 3]:
+        if c == 0:
+            continue
+        digits = HW.csd_digits(c)
+        for drop in range(len(digits) + 2):
+            c2 = approx.truncate_csd(c, drop)
+            kept = HW.csd_digits(c2)
+            assert len(kept) == max(len(digits) - drop, 1)
+            # kept digits are exactly the top digits of the original
+            assert kept == sorted(digits)[len(digits) - len(kept):]
+
+
+def test_round_coeffs_pass_reduces_csd_wires_and_is_sound():
+    c = synth_compiled((8, 9, 4), 7, seed=21)
+    net = circuit.compile_netlist(c)
+    anet = approx.approximate(net, approx.ApproxParams((2, 2), (0, 0)))
+    n_shl = lambda n: sum(1 for nd in n.nodes
+                          if nd.role == ir.ROLE_MULT and nd.op == ir.Op.SHL)
+    assert n_shl(anet) < n_shl(net)
+    assert circuit.structural_cost(anet).total_fa \
+        < circuit.structural_cost(net).total_fa
+    _measured_ok(anet, c, RNG.random((31, 8)).astype(np.float32))
+
+
+def test_power_of_two_limit_keeps_one_digit_per_multiplier():
+    c = synth_compiled((6, 7, 3), 8, seed=5)
+    net = circuit.compile_netlist(c)
+    anet = approx.approximate(net, approx.ApproxParams((8, 8), (0, 0)))
+    for n in anet.nodes:
+        if n.product_root and n.role == ir.ROLE_MULT:
+            _, coeff = approx.product_info(anet, n.id)
+            assert HW.csd_nonzero_digits(coeff) == 1    # pure power of two
+    _measured_ok(anet, c, RNG.random((17, 6)).astype(np.float32))
+
+
+def test_truncate_accum_inserts_trunc_and_discounts_adders():
+    c = synth_compiled((10, 12, 5), 8, seed=13)
+    net = circuit.compile_netlist(c)
+    anet = approx.approximate(net, approx.ApproxParams((0, 0), (3, 3)))
+    assert any(n.op == ir.Op.TRUNC for n in anet.nodes)
+    sc, asc = circuit.structural_cost(net), circuit.structural_cost(anet)
+    # same adder count, each narrowed by up to 3 FA
+    assert sum(l.n_adders for l in asc.layers) \
+        == sum(l.n_adders for l in sc.layers)
+    assert asc.total_fa < sc.total_fa
+    measured, bound = _measured_ok(anet, c,
+                                   RNG.random((29, 10)).astype(np.float32))
+    assert bound > 0
+
+
+def test_relu_elision_is_exact_when_provably_nonnegative():
+    """All-positive weights + unsigned inputs push every pre-activation
+    interval above zero: SimplifyActs removes the ReLUs bit-exactly."""
+    c = synth_compiled((5, 6, 3), 6, seed=2)
+    for q in c.q_layers:
+        np.abs(q, out=q)
+    for b in c.biases:
+        np.abs(b, out=b)
+    net = circuit.compile_netlist(c)
+    assert any(n.op == ir.Op.RELU for n in net.nodes)
+    anet = approx.passes.SimplifyActs().run(net)
+    anet = approx.rewrite.rebuild(anet, dce=True)
+    assert not any(n.op == ir.Op.RELU for n in anet.nodes)
+    assert_bit_exact(anet, c, RNG.random((19, 5)).astype(np.float32))
+    assert circuit.structural_cost(anet).total_fa \
+        < circuit.structural_cost(net).total_fa
+
+
+def test_argmax_truncation_narrows_comparator_and_bounds_decision():
+    c = synth_compiled((7, 8, 4), 8, seed=9)
+    net = circuit.compile_netlist(c)
+    anet = approx.approximate(net, approx.ApproxParams((0, 0), (0, 0),
+                                                       argmax_lsb=4))
+    am = anet.nodes[anet.argmax_id]
+    assert all(anet.nodes[a].op == ir.Op.TRUNC for a in am.args)
+    assert approx.logit_error_bound(anet) == 0       # logits untouched
+    assert approx.decision_error_bound(anet) == 2 ** 4 - 1
+    assert circuit.structural_cost(anet).argmax_fa \
+        < circuit.structural_cost(net).argmax_fa
+    # the truncated comparator can only flip decisions within the bound:
+    # exact logits and simulated argmax agree wherever the runner-up gap
+    # exceeds twice the bound
+    x = RNG.random((41, 7)).astype(np.float32)
+    xq = MZ.quantize_inputs(c, x)
+    pres, ref_cls = MZ.integer_forward(c, xq)
+    got = circuit.Simulator(anet).run(xq)["argmax"]
+    top2 = np.sort(pres[-1], axis=1)[:, -2:]
+    clear = (top2[:, 1] - top2[:, 0]) > 2 * (2 ** 4 - 1)
+    np.testing.assert_array_equal(got[clear], ref_cls[clear])
+
+
+# ---------------------------------------------------------------------------
+# soundness: randomized spec sweep + all four datasets
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dims,bits,sparsity,clusters", [
+    ((7, 8, 3), 8, 0.0, None),
+    ((11, 10, 7), 6, 0.5, None),
+    ((11, 10, 7), 4, 0.0, 4),
+    ((16, 20, 10), 8, 0.3, 8),
+    ((5, 6, 6, 4), 7, 0.2, 3),
+])
+def test_soundness_randomized_specs(dims, bits, sparsity, clusters):
+    c = synth_compiled(dims, bits, sparsity=sparsity, clusters=clusters,
+                       seed=hash((dims, bits, 77)) % 2 ** 31)
+    net = circuit.compile_netlist(c)
+    L = net.n_layers
+    r = np.random.default_rng(hash((dims, bits)) % 2 ** 31)
+    x = RNG.random((23, dims[0])).astype(np.float32)
+    for _ in range(4):
+        p = approx.ApproxParams(
+            tuple(int(v) for v in r.integers(0, 3, L)),
+            tuple(int(v) for v in r.integers(0, 5, L)),
+            int(r.integers(0, 5)))
+        anet = approx.approximate(net, p)
+        _measured_ok(anet, c, x)
+        assert circuit.structural_cost(anet).total_fa \
+            <= circuit.structural_cost(net).total_fa
+
+
+@pytest.mark.parametrize("name", sorted(PRINTED_MLPS))
+def test_soundness_on_dataset(name):
+    cfg = PRINTED_MLPS[name]
+    n_layers = len(cfg.layer_dims) - 1
+    spec = ModelMin.uniform(n_layers, bits=4, sparsity=0.4, clusters=8,
+                            input_bits=cfg.input_bits)
+    params0, (_, _, xte, _) = MZ.pretrain(cfg)
+    compiled = MZ.compile_bespoke(params0, spec,
+                                  MZ.make_masks(params0, spec))
+    net = circuit.compile_netlist(compiled)
+    for p in (approx.ApproxParams((1,) * n_layers, (0,) * n_layers),
+              approx.ApproxParams((0,) * n_layers, (3,) * n_layers),
+              approx.ApproxParams((1,) * n_layers, (2,) * n_layers,
+                                  argmax_lsb=3)):
+        anet = approx.approximate(net, p)
+        _measured_ok(anet, compiled, xte)
+
+
+def test_fit_budget_respects_budget_and_shrinks_area():
+    c = synth_compiled((9, 10, 5), 6, sparsity=0.3, clusters=4, seed=17)
+    net = circuit.compile_netlist(c)
+    budget = approx.logit_budget(net, 0.01)
+    params, anet, rep = approx.fit_budget(net, budget)
+    assert rep.bound <= budget
+    assert not params.is_identity            # something was approximated
+    assert rep.approx_fa < rep.exact_fa
+    _measured_ok(anet, c, RNG.random((25, 9)).astype(np.float32))
+    # zero budget -> identity knobs
+    p0, _, rep0 = approx.fit_budget(net, 0)
+    assert p0.is_identity and rep0.bound == 0
+
+
+# ---------------------------------------------------------------------------
+# search integration
+# ---------------------------------------------------------------------------
+
+
+def test_ga_gene_sampling_and_determinism_with_approx():
+    import random
+
+    from repro.core.ga import (CSD_DROP_CHOICES, LSB_CHOICES, GAConfig,
+                               _mutate, _random_gene)
+    cfg = GAConfig(csd_drop_choices=CSD_DROP_CHOICES,
+                   lsb_choices=LSB_CHOICES)
+    assert cfg.approx_enabled and not GAConfig().approx_enabled
+    rng = random.Random(0)
+    genes = [_random_gene(rng, cfg) for _ in range(64)]
+    assert any(g.csd_drop for g in genes) and any(g.lsb for g in genes)
+    spec = ModelMin.uniform(2, bits=4)
+    muts = [_mutate(spec, rng, cfg) for _ in range(64)]
+    assert any(m.has_approx for m in muts)
+    # exact-config sampling is untouched (no extra RNG draws)
+    r1, r2 = random.Random(5), random.Random(5)
+    g1 = [_random_gene(r1, GAConfig()) for _ in range(8)]
+    g2 = [_random_gene(r2, GAConfig()) for _ in range(8)]
+    assert g1 == g2 and not any(g.csd_drop or g.lsb for g in g1)
+
+
+def test_evaluate_population_approx_specs(tmp_path):
+    from repro.core import batch_eval as BE
+    cfg = PRINTED_MLPS["seeds"]
+    n = len(cfg.layer_dims) - 1
+    exact = ModelMin.uniform(n, bits=4, sparsity=0.4, clusters=8)
+    ax = ModelMin.uniform(n, bits=4, sparsity=0.4, clusters=8,
+                          csd_drop=1, lsb=2)
+    cache = BE.EvalCache(tmp_path / "evals.json")
+    rs = BE.evaluate_population(cfg, [exact, ax], epochs=10, cache=cache)
+    # the approximated circuit must be strictly cheaper than its exact twin
+    assert rs[1].area_mm2 < rs[0].area_mm2
+    assert rs[1].delay_levels is not None
+    assert 0.0 <= rs[1].accuracy <= 1.0
+    # approx results live in the netlist keyspace; the exact one does not
+    assert cache.get(cfg.name, 0, 10, ax, netlist=True) is not None
+    assert cache.get(cfg.name, 0, 10, exact, netlist=True) is None
+    assert cache.get(cfg.name, 0, 10, exact) is not None
+    # cached re-evaluation returns identical numbers
+    again = BE.evaluate_population(cfg, [exact, ax], epochs=10, cache=cache)
+    assert again[1].area_mm2 == rs[1].area_mm2
+    assert again[1].accuracy == rs[1].accuracy
+
+
+def test_layermin_validate_rejects_bad_genes():
+    with pytest.raises(AssertionError):
+        LayerMin(4, 0.0, None, csd_drop=9).validate()
+    with pytest.raises(AssertionError):
+        LayerMin(4, 0.0, None, lsb=17).validate()
+    with pytest.raises(AssertionError):
+        ModelMin.uniform(1, bits=4, argmax_lsb=17).validate()
+    ModelMin.uniform(1, bits=4, csd_drop=3, lsb=4, argmax_lsb=2).validate()

@@ -200,6 +200,63 @@ def test_cache_roundtrips_delay_and_separates_netlist_keyspace(tmp_path):
                      SPECS[0]).accuracy == pytest.approx(0.9)
 
 
+def test_cache_size_cap_evicts_lru_on_flush(tmp_path):
+    """A long GA sweep must not grow the on-disk cache without bound:
+    flush keeps only the ``max_entries`` most recently touched entries."""
+    path = tmp_path / "capped.json"
+    cache = BE.EvalCache(path, max_entries=3)
+    for i, s in enumerate(SPECS[:5]):
+        cache.put(CFG.name, 0, 30, MZ.EvalResult(s, 0.9, 100.0 + i, 1.0, 10))
+    # refresh the OLDEST entry: a hit keeps it young through eviction
+    assert cache.get(CFG.name, 0, 30, SPECS[0]) is not None
+    cache.flush()
+
+    fresh = BE.EvalCache(path, max_entries=3)
+    assert len(fresh) == 3
+    assert fresh.get(CFG.name, 0, 30, SPECS[0]) is not None   # refreshed
+    assert fresh.get(CFG.name, 0, 30, SPECS[4]) is not None   # newest
+    assert fresh.get(CFG.name, 0, 30, SPECS[1]) is None       # evicted
+    assert fresh.get(CFG.name, 0, 30, SPECS[2]) is None
+
+
+def test_cache_recency_only_flush_is_batched(tmp_path):
+    """A warm (hit-only) flush below the touch threshold is a no-op (no
+    multi-MB rewrite per cached generation); past the threshold the
+    refreshed stamps do persist."""
+    path = tmp_path / "warm.json"
+    cache = BE.EvalCache(path)
+    cache.put(CFG.name, 0, 30, MZ.EvalResult(SPECS[0], 0.9, 1.0, 1.0, 1))
+    cache.flush()
+    before = path.read_text()
+
+    warm = BE.EvalCache(path)
+    warm.get(CFG.name, 0, 30, SPECS[0])
+    warm.flush()                          # few touches: skipped
+    assert path.read_text() == before
+    for _ in range(BE.EvalCache.TOUCH_FLUSH_EVERY):
+        warm.get(CFG.name, 0, 30, SPECS[0])
+    warm.flush()                          # batched recency persists
+    assert path.read_text() != before
+
+
+def test_cache_cap_survives_merge_and_uncapped_by_default(tmp_path):
+    path = tmp_path / "merged.json"
+    a = BE.EvalCache(path, max_entries=2)
+    b = BE.EvalCache(path, max_entries=2)
+    a.put(CFG.name, 0, 30, MZ.EvalResult(SPECS[0], 0.9, 1.0, 1.0, 1))
+    a.flush()
+    b.put(CFG.name, 0, 30, MZ.EvalResult(SPECS[1], 0.9, 2.0, 1.0, 1))
+    b.put(CFG.name, 0, 30, MZ.EvalResult(SPECS[2], 0.9, 3.0, 1.0, 1))
+    b.flush()                     # merge of 3 entries, capped back to 2
+    assert len(BE.EvalCache(path)) == 2
+    # max_entries=None disables the cap entirely
+    big = BE.EvalCache(tmp_path / "uncapped.json", max_entries=None)
+    for i, s in enumerate(SPECS):
+        big.put(CFG.name, 0, 30, MZ.EvalResult(s, 0.9, float(i), 1.0, 1))
+    big.flush()
+    assert len(BE.EvalCache(tmp_path / "uncapped.json")) == len(SPECS)
+
+
 def test_cache_skips_retraining(tmp_path, monkeypatch):
     cache = BE.EvalCache(tmp_path / "evals.json")
     specs = SPECS[:2]

@@ -1,0 +1,147 @@
+"""Direct unit tests for `core.pareto` — non-domination edge cases,
+K>=3 objectives, crowding-distance ties (previously only exercised
+indirectly through the GA tests)."""
+import numpy as np
+import pytest
+
+from repro.core import pareto as PR
+
+
+# ---------------------------------------------------------------------------
+# dominates
+# ---------------------------------------------------------------------------
+
+
+def test_dominates_strictness():
+    assert PR.dominates([0, 0], [1, 1])
+    assert PR.dominates([0, 1], [1, 1])
+    assert not PR.dominates([1, 1], [1, 1])       # equality never dominates
+    assert not PR.dominates([0, 2], [1, 1])       # trade-off
+    assert PR.dominates([1, 2, 3], [1, 2, 4])     # K=3, one strict axis
+
+
+# ---------------------------------------------------------------------------
+# non-dominated sorting
+# ---------------------------------------------------------------------------
+
+
+def test_single_point_front():
+    fronts = PR.non_dominated_sort(np.array([[3.0, 4.0]]))
+    assert len(fronts) == 1
+    assert fronts[0].tolist() == [0]
+
+
+def test_duplicate_points_share_a_front():
+    """Equal points never dominate each other, so every duplicate of a
+    non-dominated point sits on the first front."""
+    pts = np.array([[0.0, 0.0], [0.0, 0.0], [0.0, 0.0], [1.0, 1.0]])
+    fronts = PR.non_dominated_sort(pts)
+    assert set(fronts[0].tolist()) == {0, 1, 2}
+    assert set(fronts[1].tolist()) == {3}
+
+
+def test_all_identical_points_one_front():
+    pts = np.ones((5, 3))
+    fronts = PR.non_dominated_sort(pts)
+    assert len(fronts) == 1
+    assert set(fronts[0].tolist()) == set(range(5))
+
+
+def test_three_objectives_layering():
+    pts = np.array([
+        [0.0, 0.0, 0.0],        # dominates everything
+        [1.0, 0.0, 0.0],        # front 2 (dominated only by 0)
+        [0.0, 1.0, 0.0],        # front 2
+        [1.0, 1.0, 1.0],        # front 3
+        [2.0, 0.0, 0.0],        # front 3 (dominated by 1)
+    ])
+    fronts = PR.non_dominated_sort(pts)
+    assert fronts[0].tolist() == [0]
+    assert set(fronts[1].tolist()) == {1, 2}
+    assert set(fronts[2].tolist()) == {3, 4}
+
+
+def test_fronts_partition_and_respect_domination():
+    rng = np.random.default_rng(3)
+    pts = rng.random((40, 3))
+    fronts = PR.non_dominated_sort(pts)
+    flat = [i for f in fronts for i in f.tolist()]
+    assert sorted(flat) == list(range(40))        # exact partition
+    # no member of front k is dominated by any member of front >= k
+    for k, f in enumerate(fronts):
+        later = [i for g in fronts[k:] for i in g.tolist()]
+        for i in f:
+            assert not any(PR.dominates(pts[j], pts[i]) for j in later)
+
+
+# ---------------------------------------------------------------------------
+# crowding distance
+# ---------------------------------------------------------------------------
+
+
+def test_crowding_small_fronts_are_infinite():
+    assert np.all(np.isinf(PR.crowding_distance(np.array([[1.0, 2.0]]))))
+    assert np.all(np.isinf(PR.crowding_distance(
+        np.array([[1.0, 2.0], [2.0, 1.0]]))))
+
+
+def test_crowding_boundaries_infinite_interior_finite():
+    pts = np.array([[0.0, 3.0], [1.0, 2.0], [2.0, 1.0], [3.0, 0.0]])
+    d = PR.crowding_distance(pts)
+    assert np.isinf(d[0]) and np.isinf(d[3])
+    assert np.isfinite(d[1]) and np.isfinite(d[2])
+    assert d[1] == pytest.approx(d[2])            # symmetric spacing ties
+
+
+def test_crowding_degenerate_axis_is_skipped():
+    """A zero-range objective must not divide by zero; remaining axes
+    still discriminate."""
+    pts = np.array([[0.0, 5.0], [1.0, 5.0], [2.0, 5.0], [9.0, 5.0]])
+    d = PR.crowding_distance(pts)
+    assert np.all(np.isfinite(d[1:3]))
+    assert d[2] > d[1]                             # 9 is farther from 1
+    # fully degenerate: every axis tied -> only boundary infinities
+    dd = PR.crowding_distance(np.ones((4, 2)))
+    assert np.isinf(dd).sum() >= 2
+    assert np.all(dd[np.isfinite(dd)] == 0.0)
+
+
+def test_crowding_three_objectives_accumulates_axes():
+    pts = np.array([[0.0, 0.0, 2.0], [1.0, 1.0, 1.0], [2.0, 2.0, 0.0],
+                    [3.0, 3.0, 3.0]])
+    d = PR.crowding_distance(pts)
+    assert d.shape == (4,)
+    assert np.isfinite(d[1]) and d[1] > 0
+
+
+# ---------------------------------------------------------------------------
+# hypervolume + the paper's gain metric
+# ---------------------------------------------------------------------------
+
+
+def test_hypervolume_rectangle():
+    hv = PR.hypervolume_2d(np.array([[0.5, 0.5]]), (1.0, 1.0))
+    assert hv == pytest.approx(0.25)
+    # points at/beyond the reference contribute nothing
+    assert PR.hypervolume_2d(np.array([[1.0, 0.2], [0.2, 1.0]]),
+                             (1.0, 1.0)) == 0.0
+
+
+def test_hypervolume_ignores_dominated_points():
+    a = np.array([[0.2, 0.2]])
+    b = np.array([[0.2, 0.2], [0.5, 0.5]])        # dominated adds nothing
+    assert PR.hypervolume_2d(a, (1, 1)) == pytest.approx(
+        PR.hypervolume_2d(b, (1, 1)))
+
+
+def test_gain_at_loss_nothing_qualifies():
+    pts = [(0.5, 10.0)]                           # way below the acc floor
+    assert PR.gain_at_loss(pts, baseline_acc=0.9, baseline_area=100.0,
+                           max_loss=0.05) == 1.0
+
+
+def test_gain_at_loss_picks_max_gain_within_floor():
+    pts = [(0.89, 50.0), (0.86, 10.0), (0.84, 1.0)]
+    g = PR.gain_at_loss(pts, baseline_acc=0.90, baseline_area=100.0,
+                        max_loss=0.05)
+    assert g == pytest.approx(10.0)               # 0.84 misses the floor
