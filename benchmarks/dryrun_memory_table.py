@@ -14,7 +14,7 @@ HBM = 16 * 2 ** 30
 def main(fast: bool = False):
     rows = []
     for f in sorted(glob.glob(str(ART / "*.json"))):
-        r = json.load(open(f))
+        r = json.loads(Path(f).read_text())
         if r.get("status") != "ok" or "memory" not in r:
             continue
         name = Path(f).stem

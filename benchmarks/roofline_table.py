@@ -25,7 +25,7 @@ NOTES = {
 def load(mesh="single"):
     rows = []
     for f in sorted(glob.glob(str(ART / f"*__{mesh}.json"))):
-        rows.append(json.load(open(f)))
+        rows.append(json.loads(Path(f).read_text()))
     return rows
 
 

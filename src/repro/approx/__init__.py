@@ -10,6 +10,8 @@ bounds, and `circuit.cost.structural_cost` prices the approximated circuit
 * `repro.approx.rewrite`  — rebuild walk, Pass / PassManager, DCE
 * `repro.approx.passes`   — RoundCoeffsCSD / TruncateAccum / SimplifyActs
 * `repro.approx.analyze`  — interval error propagation + logit bounds
+                            (pure Python ints — jaxlint-enforced)
+* `repro.approx.measure`  — simulation-measured counterparts of the bounds
 * `repro.approx.budget`   — ApproxParams, greedy `fit_budget` under a
                             user-supplied logit-error budget
 
@@ -24,11 +26,11 @@ Quick use::
 The GA searches the same knobs as genes: `LayerMin.csd_drop` / `.lsb` and
 `ModelMin.argmax_lsb` (see `core.ga` / `core.batch_eval`).
 """
-from repro.approx import analyze, budget, passes, rewrite  # noqa: F401
+from repro.approx import analyze, budget, measure, passes, rewrite  # noqa: F401
 from repro.approx.analyze import (decision_error_bound,  # noqa: F401
                                   logit_error_bound,
-                                  measured_max_logit_error,
                                   propagate_errors)
+from repro.approx.measure import measured_max_logit_error  # noqa: F401
 from repro.approx.budget import (ApproxParams, BudgetReport,  # noqa: F401
                                  approximate, build_passes,
                                  evaluate_netlist, fit_budget, logit_budget)

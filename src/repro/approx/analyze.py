@@ -81,19 +81,3 @@ def decision_error_bound(net: ir.Netlist) -> int:
     if net.argmax_id is None:
         return _max_abs(errs, net.output_ids)
     return _max_abs(errs, net.nodes[net.argmax_id].args)
-
-
-def measured_max_logit_error(net: ir.Netlist, compiled, x: "object") -> int:
-    """Measured counterpart of `logit_error_bound` on real inputs: simulate
-    the (approximated) netlist and compare its integer logits against the
-    exact reference `minimize.integer_forward`. Soundness demands
-    measured <= predicted on every input (tested across all datasets)."""
-    import numpy as np
-
-    from repro.circuit.simulate import Simulator
-    from repro.core import minimize as MZ
-
-    xq = MZ.quantize_inputs(compiled, x)
-    got = Simulator(net).run(xq)["logits"]
-    ref = MZ.integer_forward(compiled, xq)[0][-1]
-    return int(np.abs(np.asarray(got, np.int64) - ref).max(initial=0))

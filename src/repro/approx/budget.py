@@ -174,4 +174,17 @@ def fit_budget(net: ir.Netlist, budget: int, *,
         exact_fa=exact_fa,
         approx_fa=COST.structural_cost(best_net).total_fa,
         steps=steps)
+    from repro.verify.diagnostics import verify_enabled
+    if verify_enabled():
+        # fit_budget's output contract: a verifier-clean, DCE-compacted
+        # netlist whose proven decision-error bound honors the budget
+        from repro.verify.diagnostics import (ERROR, Diagnostic,
+                                              VerificationError)
+        from repro.verify.netlist import check_netlist
+        check_netlist(best_net, strict=True, expect_dce=True)
+        if report.bound > budget >= 0:
+            raise VerificationError([Diagnostic(
+                ERROR, "budget",
+                f"fit_budget returned bound {report.bound} over the "
+                f"requested budget {budget}")])
     return params, best_net, report

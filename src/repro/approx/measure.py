@@ -1,0 +1,27 @@
+"""Measured (simulation-based) counterparts of the interval analysis.
+
+`approx.analyze` is deliberately pure-Python-int (the jaxlint int-domain
+purity gate enforces that it never touches numpy/jax — the proofs must not
+depend on float semantics). Anything that *simulates* on real inputs lives
+here instead.
+"""
+from __future__ import annotations
+
+from repro.circuit import ir
+
+
+def measured_max_logit_error(net: ir.Netlist, compiled, x: "object") -> int:
+    """Measured counterpart of `analyze.logit_error_bound` on real inputs:
+    simulate the (approximated) netlist and compare its integer logits
+    against the exact reference `minimize.integer_forward`. Soundness
+    demands measured <= predicted on every input (tested across all
+    datasets)."""
+    import numpy as np
+
+    from repro.circuit.simulate import Simulator
+    from repro.core import minimize as MZ
+
+    xq = MZ.quantize_inputs(compiled, x)
+    got = Simulator(net).run(xq)["logits"]
+    ref = MZ.integer_forward(compiled, xq)[0][-1]
+    return int(np.abs(np.asarray(got, np.int64) - ref).max(initial=0))

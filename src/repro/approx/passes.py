@@ -92,6 +92,8 @@ class RoundCoeffsCSD(Pass):
     """Truncated-CSD / power-of-2 coefficient rounding, per layer."""
 
     name = "round-coeffs-csd"
+    monotone_cost = True      # dropped digits = fewer SHL wires / gates
+    monotone_bound = True     # adds declared local error, removes none
 
     def __init__(self, drop: Sequence[int]):
         self.drop = [int(d) for d in drop]
@@ -132,6 +134,8 @@ class TruncateAccum(Pass):
     product entering the layer's accumulation trees."""
 
     name = "truncate-accum"
+    monotone_cost = True      # TRUNC is free wiring; adders only narrow
+    monotone_bound = True     # TRUNC's intrinsic error is a superset
 
     def __init__(self, lsb: Sequence[int]):
         self.lsb = [int(b) for b in lsb]
@@ -157,6 +161,8 @@ class SimplifyActs(Pass):
     (exact) + argmax comparator-input truncation (approximate)."""
 
     name = "simplify-acts"
+    monotone_cost = True      # elision removes gates; trunc narrows
+    monotone_bound = True     # exact elision / added comparator error
 
     def __init__(self, argmax_lsb: int = 0):
         self.argmax_lsb = int(argmax_lsb)

@@ -68,7 +68,11 @@ def copy_node(new: ir.Netlist, n: ir.Node, m: Dict[int, int]) -> int:
 def live_set(net: ir.Netlist) -> set:
     """Nodes reachable from the classifier's observation points (argmax,
     logits, every layer's pre-activations) plus every ADC input lane (the
-    physical interface exists whether or not a weight survives)."""
+    physical interface exists whether or not a weight survives). Every
+    activation node is likewise an observation point: a neuron whose
+    outgoing weights are all pruned still prints its accumulator + ReLU
+    (the PR 3 layer-interface convention the analytic ``act_fa`` prices),
+    so DCE must not sweep it."""
     live = set()
     stack: List[int] = list(net.input_ids)
     if net.argmax_id is not None:
@@ -76,6 +80,7 @@ def live_set(net: ir.Netlist) -> set:
     for layer in net.layer_pre_ids:
         stack.extend(layer)
     stack.extend(net.output_ids)
+    stack.extend(n.id for n in net.nodes if n.op == ir.Op.RELU)
     while stack:
         i = stack.pop()
         if i in live:
@@ -107,9 +112,15 @@ def rebuild(net: ir.Netlist, rewriter: Optional[Rewriter] = None, *,
 
 class Pass:
     """One composable netlist transform. Subclasses implement ``run``
-    (usually a single `rebuild` with a rewriter)."""
+    (usually a single `rebuild` with a rewriter) and declare the
+    metamorphic invariants the verified pipeline may hold them to."""
 
     name = "pass"
+    # Declared metamorphic invariants, checked by PassManager's verify
+    # mode after every application (in the sanctioned pipeline order —
+    # `budget.build_passes` runs from an exact netlist):
+    monotone_cost = False     # structural cost never increases
+    monotone_bound = False    # proven error bounds only widen
 
     def run(self, net: ir.Netlist) -> ir.Netlist:
         raise NotImplementedError
@@ -122,12 +133,71 @@ class PassManager:
     """Applies ordered passes, then one dead-code rebuild that compacts the
     netlist and re-validates it. With an empty pass list the result is
     semantically identical to the input: bit-exact simulation and exactly
-    the same structural cost (the PR 3 invariants — tested)."""
+    the same structural cost (the PR 3 invariants — tested).
 
-    def __init__(self, passes: Sequence[Pass] = ()):
+    ``verify`` switches the instrumented pipeline on (None defers to the
+    ambient ``REPRO_VERIFY`` flag — on under the test suite): the netlist
+    verifier runs after *every* pass, and each pass's declared metamorphic
+    invariants are differentially checked — cost never increases under the
+    truncation passes, the interval-proven error bounds only widen along
+    the pipeline, and the final DCE sweep moves neither."""
+
+    def __init__(self, passes: Sequence[Pass] = (), *,
+                 verify: Optional[bool] = None):
         self.passes = list(passes)
+        self.verify = verify
 
     def run(self, net: ir.Netlist) -> ir.Netlist:
+        from repro.verify.diagnostics import verify_enabled
+        if not verify_enabled(self.verify):
+            for p in self.passes:
+                net = p.run(net)
+            return rebuild(net, dce=True)
+        return self._run_verified(net)
+
+    def _run_verified(self, net: ir.Netlist) -> ir.Netlist:
+        from repro.approx.analyze import (decision_error_bound,
+                                          logit_error_bound)
+        from repro.circuit.cost import structural_cost
+        from repro.verify.diagnostics import (ERROR, Diagnostic,
+                                              VerificationError)
+        from repro.verify.netlist import check_netlist
+
+        def fail(rule: str, msg: str):
+            raise VerificationError([Diagnostic(ERROR, rule, msg)])
+
+        def measure(n: ir.Netlist):
+            """(DCE'd snapshot, its cost, its proven bounds). Differential
+            checks must measure the *swept* netlist: a rewrite orphans the
+            subnets it replaces, and those stay in the node list (inflating
+            structural cost) until the final dead-code rebuild."""
+            snap = rebuild(n, dce=True)
+            return snap, structural_cost(snap).total_fa, (
+                logit_error_bound(snap), decision_error_bound(snap))
+
+        # strict conventions are demanded of a pass only when its input
+        # already met them (compiler outputs do; hand-built IR need not)
+        strict = not check_netlist(net)
+        snap, cost, bounds = measure(net)
         for p in self.passes:
             net = p.run(net)
-        return rebuild(net, dce=True)
+            raw = (logit_error_bound(net), decision_error_bound(net))
+            snap, c2, b2 = measure(net)
+            check_netlist(snap, strict=strict, expect_dce=True)
+            if raw != b2:
+                fail("pass-bound",
+                     f"{p.name}: dead-code sweep moved the proven bounds "
+                     f"{raw} -> {b2} (DCE must be error-neutral)")
+            if p.monotone_cost and c2 > cost + 1e-9:
+                fail("pass-cost",
+                     f"{p.name}: structural cost increased "
+                     f"{cost:.3f} -> {c2:.3f} under a truncation pass")
+            if p.monotone_bound and (b2[0] < bounds[0]
+                                     or b2[1] < bounds[1]):
+                fail("pass-bound",
+                     f"{p.name}: proven error bounds narrowed "
+                     f"{bounds} -> {b2} — a rewrite lost declared error")
+            cost, bounds = c2, b2
+        # the last snapshot IS the pipeline result (same final rebuild the
+        # unverified path performs)
+        return snap

@@ -139,6 +139,13 @@ def compile_netlist(c: "MZ.CompiledMLP") -> ir.Netlist:
     net.output_ids = list(net.layer_pre_ids[-1])
     net.argmax(net.output_ids)
     net.validate()
+    from repro.verify.diagnostics import verify_enabled
+    if verify_enabled():
+        # the compiler's own output contract, beyond structural soundness:
+        # microarchitectural conventions hold (strict), the netlist is
+        # exact (no TRUNC, no error annotations) and fully live
+        from repro.verify.netlist import check_netlist
+        check_netlist(net, strict=True, expect_exact=True, expect_dce=True)
     return net
 
 

@@ -131,13 +131,17 @@ class Netlist:
     def const(self, value: int, *, layer: int = -1,
               role: str = ROLE_CONST, unit: Tuple[int, ...] = ()) -> int:
         """Hardwired integer. Deduplicated by value: a printed constant is
-        a wire pattern, re-usable everywhere."""
+        a wire pattern, re-usable everywhere. Because the node is shared,
+        caller tags are NOT honored — every CONST carries the canonical
+        tags (role=const, layer=-1, unit=()); honoring them would let a
+        value-cache hit silently return a node tagged by the *first*
+        caller (the verifier enforces canonicality)."""
+        del layer, role, unit              # shared node: tags are canonical
         value = int(value)
         if value in self._const_cache:
             return self._const_cache[value]
         nid = self._add(Node(len(self.nodes), Op.CONST, value=value,
-                             lo=value, hi=value, role=role, layer=layer,
-                             unit=unit))
+                             lo=value, hi=value))
         self._const_cache[value] = nid
         return nid
 
@@ -187,9 +191,14 @@ class Netlist:
                               lo=max(n.lo, 0), hi=max(n.hi, 0), **tags))
 
     def argmax(self, logits: Sequence[int]) -> int:
-        hi = len(logits) - 1
-        nid = self._add(Node(len(self.nodes), Op.ARGMAX, tuple(logits),
-                             lo=0, hi=hi, role=ROLE_ARGMAX))
+        logits = tuple(logits)
+        if not logits:
+            raise ValueError("argmax over an empty logit list")
+        if self.argmax_id is not None:
+            raise ValueError(
+                "argmax already lowered (one comparator tree per netlist)")
+        nid = self._add(Node(len(self.nodes), Op.ARGMAX, logits,
+                             lo=0, hi=len(logits) - 1, role=ROLE_ARGMAX))
         self.argmax_id = nid
         return nid
 
@@ -228,7 +237,10 @@ class Netlist:
 
     def levels(self) -> List[List[int]]:
         """Topological level per node (all args strictly earlier levels) —
-        the simulator's batching unit. CONST/INPUT sit at level 0."""
+        the simulator's batching unit. CONST/INPUT sit at level 0. An
+        empty netlist has no levels."""
+        if not self.nodes:
+            return []
         lev = [0] * len(self.nodes)
         out: List[List[int]] = [[]]
         for n in self.nodes:
@@ -247,16 +259,15 @@ class Netlist:
         return c
 
     def validate(self) -> None:
-        """Structural invariants: topo order, one pre node per neuron,
-        outputs are the last layer's pre nodes, widths fit int64."""
-        for n in self.nodes:
-            assert self.nodes[n.id] is n, f"id/position mismatch at {n.id}"
-            for a in n.args:
-                assert a < n.id, f"node {n.id} uses later node {a}"
-        assert self.layer_pre_ids, "no layers lowered"
-        assert self.output_ids == self.layer_pre_ids[-1]
-        assert len(self.w_bits) == self.n_layers
-        if self.max_width > 62:
-            raise OverflowError(
-                f"netlist width {self.max_width} exceeds the 62-bit exact "
-                "simulation budget (degenerate scale chain?)")
+        """Structural invariants — delegates to the independent verifier
+        (`repro.verify.netlist`): topo order + opcode arity, re-derived
+        value intervals, level/depth consistency, CONST dedup, classifier
+        bookkeeping, argmax terminality, and the 62-bit simulation budget
+        (still raised as the historical OverflowError). Raises
+        `repro.verify.VerificationError` (an AssertionError) with the
+        full diagnostic list otherwise. Microarchitectural conventions
+        (role legality, TRUNC provenance) are reported but non-fatal
+        here; the compiler and the pass pipeline check their own outputs
+        in strict mode."""
+        from repro.verify.netlist import check_netlist
+        check_netlist(self)

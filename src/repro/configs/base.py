@@ -259,7 +259,7 @@ SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
 
 
 def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
-    """Cell skip policy (documented in DESIGN.md §8)."""
+    """Cell skip policy (documented in DESIGN.md §9)."""
     if shape.name == "long_500k" and not arch.sub_quadratic:
         return False, ("full/global attention at 524k context is the "
                        "quadratic-regime artifact the shape excludes; "

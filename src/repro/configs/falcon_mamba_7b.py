@@ -13,5 +13,5 @@ CONFIG = ArchConfig(
     source="arXiv:2410.05355; unverified",
     notes="sub-quadratic: O(1) recurrent state -> long_500k runs; "
           "paper-technique caveat: A_log/dt params excluded from aggressive "
-          "quantization (DESIGN.md §5)",
+          "quantization (DESIGN.md §6)",
 )

@@ -25,5 +25,5 @@ CONFIG = ArchConfig(
     rope_theta=10000.0,
     source="arXiv:2408.00118; hf",
     notes="global-attention half keeps the arch out of the sub-quadratic "
-          "class; long_500k skipped (DESIGN.md §8)",
+          "class; long_500k skipped (DESIGN.md §9)",
 )

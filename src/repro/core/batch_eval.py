@@ -330,7 +330,7 @@ def _compile_and_price(params_pop, specs, masks_serial, xte, yte, *,
     from repro import circuit as CIRC            # lazy: circuit imports us
     compiled = []
     for p, spec in enumerate(specs):
-        params_p = jax.tree_util.tree_map(lambda a: a[p], params_pop)
+        params_p = jax.tree_util.tree_map(lambda a, p=p: a[p], params_pop)
         compiled.append(MZ.compile_bespoke(params_p, spec, masks_serial[p]))
     nets = [CIRC.compile_netlist(c) for c in compiled]
     approx_res = {p: AX.evaluate_netlist(nets[p], compiled[p], spec,
@@ -395,6 +395,13 @@ def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
     exact entry).
     """
     specs = list(specs)
+    from repro.verify.diagnostics import verify_enabled
+    if specs and verify_enabled():
+        # static spec lint before any costly QAT: gene-range/arch
+        # legality + serialize->parse->serialize byte-stability (a
+        # non-round-tripping spec would fracture the cache keyspace)
+        from repro.verify.spec import check_specs
+        check_specs(specs, cfg)
     results: Dict[str, MZ.EvalResult] = {}
     todo: List[ModelMin] = []
     queued = set()

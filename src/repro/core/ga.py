@@ -131,7 +131,7 @@ def _tournament(idx_ranked: List[int], rng) -> int:
 
 def run_nsga2(n_layers: int,
               evaluate: Optional[Callable[[ModelMin], Tuple[float, float]]],
-              cfg: GAConfig = GAConfig(),
+              cfg: Optional[GAConfig] = None,
               seed_specs: Optional[List[ModelMin]] = None, *,
               batch_evaluate: Optional[
                   Callable[[List[ModelMin]], List[Tuple[float, float]]]]
@@ -147,6 +147,8 @@ def run_nsga2(n_layers: int,
     """
     if evaluate is None and batch_evaluate is None:
         raise ValueError("need evaluate or batch_evaluate")
+    if cfg is None:
+        cfg = GAConfig()
     rng = random.Random(cfg.seed)
     cache: Dict[str, Tuple[float, float]] = {}
 

@@ -293,7 +293,9 @@ def baseline(cfg: PrintedMLPConfig, *, seed: int = 0) -> EvalResult:
                          seed=seed)
 
 
-def quant_sweep(cfg, bits_range=range(2, 8), *, epochs=150, seed=0):
+def quant_sweep(cfg, bits_range=None, *, epochs=150, seed=0):
+    if bits_range is None:
+        bits_range = range(2, 8)
     n = len(cfg.layer_dims) - 1
     return [evaluate_spec(cfg, ModelMin.uniform(n, bits=b), epochs=epochs,
                           seed=seed) for b in bits_range]

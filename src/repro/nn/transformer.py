@@ -196,7 +196,7 @@ def _segment_apply(seg_params, x, cfg: ArchConfig, seg: Segment, *,
         carry = (x, jnp.zeros((), jnp.float32))
         ys = []
         for r in range(seg.repeats):
-            xs_r = jax.tree_util.tree_map(lambda a: a[r], xs)
+            xs_r = jax.tree_util.tree_map(lambda a, r=r: a[r], xs)
             carry, y = body(carry, xs_r)
             ys.append(y)
         (x, aux) = carry
@@ -265,7 +265,7 @@ def _encoder_forward(p, frames, cfg: ArchConfig, *, remat=True,
         n = cfg.encoder.num_layers
         for r in range(n):
             carry, _ = body(carry, jax.tree_util.tree_map(
-                lambda a: a[r], p["segments"][0]))
+                lambda a, r=r: a[r], p["segments"][0]))
         x = carry[0]
     else:
         (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),

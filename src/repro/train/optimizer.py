@@ -2,7 +2,7 @@
 
 AdamW with fp32 master state regardless of param dtype (bf16 params at scale)
 — the m/v/master leaves inherit the param sharding (FSDP over `data`
-composes with TP over `model`: ZeRO-1/3 hybrid, DESIGN.md §6).
+composes with TP over `model`: ZeRO-1/3 hybrid, DESIGN.md §7).
 """
 from __future__ import annotations
 

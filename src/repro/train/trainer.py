@@ -28,7 +28,7 @@ class TrainerConfig:
     microbatch: Optional[int] = None
     ckpt_dir: Optional[str] = None
     keep_ckpts: int = 3
-    straggler_deadline_s: float = 0.0   # >0: skip-slow-batch barrier (docs §6)
+    straggler_deadline_s: float = 0.0   # >0: skip-slow-batch barrier (docs §7)
 
 
 class Trainer:

@@ -1,0 +1,33 @@
+"""Static-analysis layer: machine-checked invariants for the circuit
+compiler, the approximation passes and the search stack.
+
+Three analyzers and the hooks that make them ambient:
+
+* `repro.verify.netlist` — re-derives every node's interval/width, the
+  topo/level/depth analyses and the classifier bookkeeping independently
+  of the IR's own code and reports structured `Diagnostic` records
+  (`Netlist.validate()` delegates here; the pass pipeline and the
+  compiler check their outputs in strict mode).
+* `repro.verify.spec`    — lints `ModelMin` genomes before any costly
+  QAT evaluation: gene-range/arch legality plus serialize->parse->
+  serialize byte-stability (the EvalCache keyspace guard).
+* `tools/jaxlint.py`     — repo-specific AST lint over ``src/`` (pure-int
+  domain purity, tracer-hostile Python in jitted bodies, static_argnames
+  hygiene); standalone, stdlib-only, run as a pytest test and a CI gate.
+
+The ambient switch is the ``REPRO_VERIFY`` env var (`verify_enabled`):
+the test suite turns it on in ``tests/conftest.py``, so every pass, every
+compile and every population evaluation in CI is verified; production
+sweeps leave it off and pay nothing.
+
+`repro.verify.mutate` ships the seeded-corruption catalog the tests use
+to prove the verifier actually catches each invariant class.
+"""
+from repro.verify.diagnostics import (ERROR, WARN, Diagnostic,  # noqa: F401
+                                      VerificationError, errors,
+                                      verify_enabled)
+from repro.verify.netlist import (SIM_WIDTH_BUDGET,  # noqa: F401
+                                  check_netlist, verify_netlist)
+from repro.verify.spec import (check_specs, lint_spec,  # noqa: F401
+                               lint_specs)
+from repro.verify.mutate import CATALOG, Mutation, apply_mutation  # noqa: F401

@@ -6,6 +6,12 @@ import os
 # keep XLA quiet and single-threaded compile deterministic-ish on the 1-core box
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# ambient static analysis ON under the test suite: every PassManager run,
+# every compiled netlist and every evaluated population is verified
+# (repro.verify). Production sweeps leave REPRO_VERIFY unset and pay
+# nothing. Export REPRO_VERIFY=0 to profile the unverified paths.
+os.environ.setdefault("REPRO_VERIFY", "1")
+
 import jax
 import numpy as np
 import pytest

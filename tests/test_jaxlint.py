@@ -1,0 +1,114 @@
+"""jaxlint (tools/jaxlint.py) tests: the whole src/ tree is clean (the CI
+static-analysis gate, enforced here too so a hazard fails fast locally),
+and each rule family fires on a minimal reproducer."""
+import importlib.util
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "jaxlint", REPO / "tools" / "jaxlint.py")
+jaxlint = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(jaxlint)
+
+
+def _lint_src(src: str, tmp_path, name="mod.py"):
+    f = tmp_path / name
+    f.write_text(src)
+    return jaxlint.lint_file(f, rel=name)
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+def test_src_tree_is_clean():
+    assert jaxlint.lint_paths([str(REPO / "src")]) == []
+
+
+def test_int_domain_purity(tmp_path):
+    src = ("import numpy as np\n"
+           "from jax import numpy as jnp\n"
+           "def f(a, b):\n"
+           "    return a / b\n")
+    findings = _lint_src(src, tmp_path, name="repro/circuit/ir.py".replace(
+        "/", "_"))
+    # not an int-domain module name -> nothing fires
+    assert findings == []
+    f = tmp_path / "repro" / "circuit"
+    f.mkdir(parents=True)
+    (f / "ir.py").write_text(src)
+    findings = jaxlint.lint_paths([str(tmp_path)])
+    assert sorted(set(_rules(findings))) == ["int-domain"]
+    assert len(findings) == 3            # numpy import, jax import, '/'
+
+
+def test_tracer_branch_and_numpy_in_jit(tmp_path):
+    src = ("import functools\n"
+           "import jax\n"
+           "import numpy as np\n"
+           "@functools.partial(jax.jit, static_argnames=('k',))\n"
+           "def f(x, y, *, k=2):\n"
+           "    if k > 1:\n"              # static: fine
+           "        pass\n"
+           "    pad = x if k else y\n"
+           "    if y > 0:\n"              # tracer: flagged
+           "        x = x + 1\n"
+           "    while x:\n"               # tracer: flagged
+           "        break\n"
+           "    return np.sum(x)\n")      # numpy on tracer: flagged
+    findings = _lint_src(src, tmp_path)
+    assert _rules(findings) == ["tracer-branch", "tracer-branch",
+                                "numpy-in-jit"]
+
+
+def test_shape_derived_locals_not_flagged(tmp_path):
+    # the kernels' idiom: branch on static params and shape-derived locals
+    src = ("import functools\n"
+           "import jax\n"
+           "@functools.partial(jax.jit, static_argnames=('interpret',))\n"
+           "def f(q, *, interpret=None):\n"
+           "    if interpret is None:\n"
+           "        interpret = True\n"
+           "    T = q.shape[0]\n"
+           "    padT = (-T) % 8\n"
+           "    if padT:\n"
+           "        q = q * 1\n"
+           "    return q\n")
+    assert _lint_src(src, tmp_path) == []
+
+
+def test_static_argnames_hygiene(tmp_path):
+    src = ("import functools\n"
+           "import jax\n"
+           "@functools.partial(jax.jit, static_argnames=('ghost', 'opts'))\n"
+           "def f(x, *, opts=[1]):\n"
+           "    return x\n")
+    findings = _lint_src(src, tmp_path)
+    assert _rules(findings) == ["static-argnames", "static-argnames"]
+    assert "ghost" in findings[0].message
+    assert "opts" in findings[1].message
+
+
+def test_nested_defs_inside_jit_are_scanned(tmp_path):
+    src = ("import jax\n"
+           "@jax.jit\n"
+           "def f(x, y):\n"
+           "    def inner(z):\n"
+           "        if y:\n"              # outer tracer used in nested def
+           "            return z\n"
+           "        return z + 1\n"
+           "    return inner(x)\n")
+    assert _rules(_lint_src(src, tmp_path)) == ["tracer-branch"]
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    good = tmp_path / "ok.py"
+    good.write_text("x = 1\n")
+    assert jaxlint.main([str(good)]) == 0
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax\n@jax.jit\ndef f(a):\n    if a:\n"
+                   "        return 1\n    return 0\n")
+    assert jaxlint.main([str(bad)]) == 1
+    assert jaxlint.main([]) == 2
+    capsys.readouterr()

@@ -68,7 +68,8 @@ def test_dryrun_artifacts_consistent():
         pytest.skip("dry-run artifacts not generated yet")
     checked = 0
     for f in files:
-        r = json.load(open(f))
+        with open(f) as fh:
+            r = json.load(fh)
         if r.get("status") != "ok" or "roofline" not in r:
             continue
         ro = r["roofline"]

@@ -1,0 +1,297 @@
+"""Verification-layer tests (repro.verify): the netlist verifier is clean
+on every sanctioned producer (compiler, pass pipeline, budget fitter)
+across all four datasets' architectures, catches 100% of the seeded
+corruption catalog, the spec linter guards the GA genome / EvalCache
+keyspace, and the IR edge-case hardening holds."""
+import os
+
+import numpy as np
+import pytest
+
+from repro import approx, circuit
+from repro.approx.budget import ApproxParams
+from repro.circuit import ir
+from repro.configs.printed_mlp import PRINTED_MLPS
+from repro.core.compression_spec import LayerMin, ModelMin
+from repro.verify import (CATALOG, ERROR, WARN, Diagnostic,
+                          VerificationError, apply_mutation, check_netlist,
+                          check_specs, errors, lint_spec, verify_enabled,
+                          verify_netlist)
+
+from test_circuit import synth_compiled
+
+DATASET_PARAMS = {
+    # modest synthetic stand-ins with each dataset's real layer dims
+    "whitewine": dict(sparsity=0.4, clusters=4, seed=11),
+    "redwine": dict(sparsity=0.3, clusters=None, seed=12),
+    "pendigits": dict(sparsity=0.6, clusters=8, seed=13),
+    "seeds": dict(sparsity=0.0, clusters=4, seed=14),
+}
+
+
+def _compiled_net(name):
+    cfg = PRINTED_MLPS[name]
+    c = synth_compiled(cfg.layer_dims, 4, **DATASET_PARAMS[name])
+    return circuit.compile_netlist(c)
+
+
+# ---------------------------------------------------------------------------
+# verifier: clean on sanctioned producers, all four architectures
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(PRINTED_MLPS))
+def test_verifier_clean_on_compiled_and_budgeted(name):
+    net = _compiled_net(name)
+    assert verify_netlist(net, expect_exact=True, expect_dce=True) == []
+
+    # fixed-knob approximation
+    L = net.n_layers
+    anet = approx.approximate(net, ApproxParams((1,) * L, (2,) * L, 2))
+    assert verify_netlist(anet, expect_dce=True) == []
+
+    # budget-fitted approximation (small caps keep the greedy search quick)
+    _, bnet, rep = approx.fit_budget(net, approx.logit_budget(net, 0.03),
+                                     max_csd_drop=2, max_lsb=4,
+                                     max_argmax_lsb=3)
+    assert verify_netlist(bnet, expect_dce=True) == []
+    assert rep.bound <= rep.budget
+
+
+# ---------------------------------------------------------------------------
+# verifier: 100% detection of the seeded-corruption catalog
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def victim_nets():
+    net = _compiled_net("whitewine")
+    anet = approx.approximate(
+        net, ApproxParams((1, 2), (2, 1), 3))
+    return net, anet
+
+
+@pytest.mark.parametrize("mutation", CATALOG, ids=lambda m: m.name)
+def test_mutation_catalog_detected(victim_nets, mutation):
+    net, anet = victim_nets
+    bad = apply_mutation(anet, mutation) or apply_mutation(net, mutation)
+    assert bad is not None, f"{mutation.name} inapplicable to both victims"
+    diags = verify_netlist(bad, expect_dce=mutation.needs_dce)
+    fatal = {d.rule for d in diags
+             if d.severity == ERROR or mutation.strict_only}
+    assert fatal & mutation.rules, (
+        f"{mutation.name}: expected one of {sorted(mutation.rules)}, "
+        f"got {sorted((d.severity, d.rule) for d in diags)}")
+
+
+def test_mutations_raise_through_check(victim_nets):
+    net, anet = victim_nets
+    for m in CATALOG:
+        bad = apply_mutation(anet, m) or apply_mutation(net, m)
+        with pytest.raises((VerificationError, OverflowError)):
+            check_netlist(bad, strict=True, expect_dce=m.needs_dce)
+
+
+def test_width_budget_maps_to_overflowerror():
+    # the historical Netlist.validate contract: a pure width violation is
+    # an OverflowError, not a VerificationError
+    net = ir.Netlist(in_bits=8, w_bits=[4])
+    x = net.input(0)
+    for _ in range(9):
+        x = net.shl(x, 7)
+    net.layer_pre_ids.append([x])
+    net.output_ids = [x]
+    with pytest.raises(OverflowError):
+        check_netlist(net)
+
+
+# ---------------------------------------------------------------------------
+# pass-pipeline instrumentation
+# ---------------------------------------------------------------------------
+
+
+def test_pass_manager_catches_lying_pass():
+    from repro.approx.rewrite import Pass, PassManager, rebuild
+
+    class Inflate(Pass):
+        """Claims monotone cost, then grows every multiplier."""
+        name = "inflate"
+        monotone_cost = True
+
+        def run(self, net):
+            def rw(new, old, n, m):
+                if n.op != ir.Op.SHL or n.role != ir.ROLE_MULT:
+                    return None
+                # x<<s  ->  (x<<s - x<<0) + x<<0: same value, two extra
+                # mult-tagged SHL wires (csd_digits) — cost strictly up
+                tags = dict(role=n.role, layer=n.layer, unit=n.unit)
+                x = m[n.args[0]]
+                a = new.shl(x, n.shift, **tags)
+                out = new.add(new.sub(a, new.shl(x, 0, **tags), **tags),
+                              new.shl(x, 0, **tags), **tags)
+                new.nodes[out].product_root = n.product_root
+                return out
+            return rebuild(net, rw)
+
+    net = _compiled_net("seeds")
+    with pytest.raises(VerificationError) as e:
+        PassManager([Inflate()], verify=True).run(net)
+    assert any(d.rule == "pass-cost" for d in e.value.diagnostics)
+
+
+def test_pass_manager_catches_bound_loss():
+    from repro.approx.rewrite import Pass, PassManager, rebuild
+
+    class DropErr(Pass):
+        """Truncates but forgets to declare the error (annotation-less
+        TRUNC is structurally declared, so instead it erases an upstream
+        pass's annotation)."""
+        name = "drop-err"
+        monotone_bound = True
+
+        def run(self, net):
+            def rw(new, old, n, m):
+                return None
+            out = rebuild(net, rw)
+            for n in out.nodes:
+                n.err_lo = n.err_hi = 0
+            return out
+
+    net = _compiled_net("seeds")
+    anet = approx.approximate(net, ApproxParams((2,), (0,), 0))
+    if approx.logit_error_bound(anet) == 0:
+        pytest.skip("csd rounding produced no declared error on this net")
+    with pytest.raises(VerificationError) as e:
+        PassManager([DropErr()], verify=True).run(anet)
+    assert any(d.rule == "pass-bound" for d in e.value.diagnostics)
+
+
+def test_identity_pipeline_verified_is_noop():
+    from repro.approx.rewrite import PassManager
+    net = _compiled_net("seeds")
+    out = PassManager([], verify=True).run(net)
+    assert circuit.structural_cost(out).total_fa == pytest.approx(
+        circuit.structural_cost(net).total_fa)
+
+
+def test_verify_enabled_flag(monkeypatch):
+    monkeypatch.setenv("REPRO_VERIFY", "0")
+    assert not verify_enabled()
+    monkeypatch.setenv("REPRO_VERIFY", "1")
+    assert verify_enabled()
+    assert not verify_enabled(False)       # explicit override wins
+    monkeypatch.delenv("REPRO_VERIFY")
+    assert not verify_enabled()
+    assert verify_enabled(True)
+
+
+# ---------------------------------------------------------------------------
+# spec linter
+# ---------------------------------------------------------------------------
+
+
+def test_spec_lint_clean_on_legal_spec():
+    cfg = PRINTED_MLPS["whitewine"]
+    s = ModelMin.uniform(len(cfg.layer_dims) - 1, bits=4, sparsity=0.5,
+                         clusters=4, csd_drop=1, lsb=2, argmax_lsb=2)
+    assert lint_spec(s, cfg) == []
+
+
+def test_spec_lint_range_violations():
+    s = ModelMin((LayerMin(bits=1),), input_bits=8)
+    rules = {d.rule for d in errors(lint_spec(s))}
+    assert "range" in rules
+    s = ModelMin((LayerMin(bits=4, lsb=99),))
+    assert any(d.rule == "range" for d in errors(lint_spec(s)))
+    assert any(d.rule == "range" for d in errors(lint_spec(ModelMin(()))))
+
+
+def test_spec_lint_rejects_noncanonical_scalars():
+    # np.int64 genes serialize differently under some json encoders and
+    # fracture the EvalCache keyspace — caught before any training
+    s = ModelMin((LayerMin(bits=np.int64(4)),))
+    assert any(d.rule == "type" for d in errors(lint_spec(s)))
+
+
+def test_spec_lint_arch_rules():
+    cfg = PRINTED_MLPS["seeds"]        # dims (7, 8, 3)
+    L = len(cfg.layer_dims) - 1
+    wrong = ModelMin.uniform(L + 1, bits=4)
+    assert any(d.rule == "arch" for d in errors(lint_spec(wrong, cfg)))
+    # clusters > layer outputs is degenerate but legal: WARN, never ERROR
+    degen = ModelMin.uniform(L, bits=4, clusters=16)
+    diags = lint_spec(degen, cfg)
+    assert errors(diags) == []
+    assert any(d.severity == WARN and d.rule == "arch" for d in diags)
+
+
+def test_check_specs_raises_and_passes():
+    cfg = PRINTED_MLPS["whitewine"]
+    L = len(cfg.layer_dims) - 1
+    good = [ModelMin.uniform(L, bits=b) for b in (2, 4, 8)]
+    check_specs(good, cfg)                       # no raise
+    with pytest.raises(VerificationError):
+        check_specs(good + [ModelMin.uniform(L, bits=77)], cfg)
+
+
+# ---------------------------------------------------------------------------
+# IR edge-case hardening (PR 6 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_const_dedup_keeps_canonical_tags():
+    net = ir.Netlist(in_bits=8, w_bits=[4])
+    a = net.const(5)
+    b = net.const(5, role=ir.ROLE_MULT, layer=3, unit=(1, 2))
+    assert a == b
+    n = net.nodes[a]
+    assert (n.role, n.layer, n.unit) == (ir.ROLE_CONST, -1, ())
+    # the verifier enforces the canonical-tag convention on shared consts
+    assert not [d for d in verify_netlist(net)
+                if d.rule in ("const-dedup", "role")]
+
+
+def test_argmax_guards():
+    net = ir.Netlist(in_bits=8, w_bits=[])
+    with pytest.raises(ValueError):
+        net.argmax([])
+    x = net.input(0)
+    net.layer_pre_ids.append([x])
+    net.output_ids = [x]
+    net.argmax([x])
+    with pytest.raises(ValueError):
+        net.argmax([x])
+
+
+def test_degenerate_netlist_analyses():
+    empty = ir.Netlist(in_bits=8, w_bits=[])
+    assert empty.levels() == []
+    assert empty.depths() == []
+    assert empty.critical_path_levels() == 0
+
+    single = ir.Netlist(in_bits=8, w_bits=[])
+    single.input(0)
+    assert single.levels() == [[0]]
+    assert single.depths() == [0]
+    assert single.critical_path_levels() == 0
+
+    # wire-only: SHL adds a level but no gate depth
+    wires = ir.Netlist(in_bits=8, w_bits=[])
+    x = wires.input(0)
+    y = wires.shl(x, 3)
+    assert wires.levels() == [[x], [y]]
+    assert wires.depths()[y] == 0
+    assert wires.critical_path_levels() == 0
+
+
+def test_validate_delegates_to_verifier():
+    net = ir.Netlist(in_bits=8, w_bits=[4])
+    x = net.input(0)
+    net.layer_pre_ids.append([net.add(x, x, role=ir.ROLE_BIAS, layer=0,
+                                      unit=(0,))])
+    net.output_ids = list(net.layer_pre_ids[0])
+    net.validate()                               # sound, non-strict
+
+    net.nodes[x].lo, net.nodes[x].hi = 5, 3      # corrupt an interval
+    with pytest.raises(AssertionError):          # VerificationError is-a
+        net.validate()

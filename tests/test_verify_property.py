@@ -1,0 +1,76 @@
+"""Property-based verification tests: randomized exact netlists pushed
+through randomized approximation pipelines stay verifier-clean, the
+rebuild walk is idempotent under DCE, and every seeded corruption from the
+mutation catalog is caught — on arbitrary architectures, not just the
+fixtures in test_verify.py. Degrades to clean skips without hypothesis
+(see tests/_hypothesis_compat.py)."""
+import numpy as np
+
+from repro import approx, circuit
+from repro.approx.budget import ApproxParams
+from repro.approx.rewrite import rebuild
+from repro.verify import (CATALOG, ERROR, apply_mutation, verify_netlist)
+
+from _hypothesis_compat import given, settings, st
+from test_circuit import synth_compiled
+
+
+def _random_case(seed: int):
+    """Seed -> (exact compiled netlist, random knob vector). Shapes stay
+    small enough that the 62-bit sim budget can never trip."""
+    r = np.random.default_rng(seed)
+    dims = (int(r.integers(3, 10)), int(r.integers(3, 10)),
+            int(r.integers(2, 6)))
+    bits = int(r.integers(2, 6))
+    clusters = int(r.integers(2, 6)) if r.random() < 0.5 else None
+    c = synth_compiled(dims, bits, sparsity=float(r.uniform(0.0, 0.7)),
+                       clusters=clusters, seed=seed % 997)
+    net = circuit.compile_netlist(c)
+    p = ApproxParams(tuple(int(r.integers(0, 3)) for _ in range(2)),
+                     tuple(int(r.integers(0, 3)) for _ in range(2)),
+                     int(r.integers(0, 4)))
+    return net, p
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_random_pipelines_verifier_clean(seed):
+    net, p = _random_case(seed)
+    assert verify_netlist(net, expect_exact=True, expect_dce=True) == []
+    anet = approx.approximate(net, p)
+    assert verify_netlist(anet, expect_dce=True) == []
+    # the proven bound is a sound overestimate of the exact-vs-approx gap
+    assert approx.decision_error_bound(anet) >= 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_rebuild_dce_idempotent(seed):
+    net, p = _random_case(seed)
+    anet = approx.approximate(net, p)
+    once = rebuild(anet, dce=True)
+    twice = rebuild(once, dce=True)
+    assert [(n.op, n.args, n.value, n.shift, n.lo, n.hi, n.role, n.layer,
+             n.unit, n.err_lo, n.err_hi) for n in once.nodes] \
+        == [(n.op, n.args, n.value, n.shift, n.lo, n.hi, n.role, n.layer,
+             n.unit, n.err_lo, n.err_hi) for n in twice.nodes]
+    assert circuit.structural_cost(once).total_fa \
+        == circuit.structural_cost(twice).total_fa
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6),
+       st.integers(min_value=0, max_value=len(CATALOG) - 1))
+def test_catalog_caught_on_random_nets(seed, mi):
+    net, p = _random_case(seed)
+    anet = approx.approximate(net, p)
+    m = CATALOG[mi]
+    bad = apply_mutation(anet, m) or apply_mutation(net, m)
+    if bad is None:          # mutation needs structure this net lacks
+        return
+    diags = verify_netlist(bad, expect_dce=m.needs_dce)
+    fatal = {d.rule for d in diags
+             if d.severity == ERROR or m.strict_only}
+    assert fatal & m.rules, (
+        f"seed={seed}: {m.name} escaped — got "
+        f"{sorted((d.severity, d.rule) for d in diags)}")

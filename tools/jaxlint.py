@@ -1,0 +1,275 @@
+#!/usr/bin/env python
+"""jaxlint — stdlib-only AST lint for the repo's JAX/int-domain hazards.
+
+Three rule families (see DESIGN.md §5):
+
+INT-DOMAIN PURITY (``int-domain``) — the exact-arithmetic core
+  (`circuit/ir.py`, `approx/rewrite.py`, `approx/analyze.py`) proves error
+  bounds with Python ints. Any numpy/jax import (module- or
+  function-level) or a true-division operator (``/``) in those modules
+  would smuggle float semantics into the proofs.
+
+TRACER HAZARDS (``tracer-branch``, ``numpy-in-jit``) — inside a function
+  decorated with ``@jax.jit`` / ``@functools.partial(jax.jit, ...)``,
+  a Python ``if``/``while`` whose test reads a *non-static* parameter
+  branches on a tracer (trace-time crash or silent constant-folding), and
+  a ``np.*`` call materializes the tracer on host. Branching on static
+  params or on shape-derived locals is idiomatic and is NOT flagged.
+
+STATIC-ARGNAMES HYGIENE (``static-argnames``) — every name listed in
+  ``static_argnames`` must exist in the decorated function's signature,
+  and a parameter with a mutable-literal default (list/dict/set —
+  unhashable) must not be declared static.
+
+Usage::
+
+    python tools/jaxlint.py src/          # exit 1 on findings
+    python tools/jaxlint.py a.py b.py
+
+Stdlib only — runs on a bare interpreter, usable as a CI gate before any
+heavyweight dependency installs.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+from typing import List, NamedTuple, Optional, Sequence, Set
+
+# modules held to exact-Python-int purity, relative to any scan root
+INT_DOMAIN_MODULES = (
+    "repro/circuit/ir.py",
+    "repro/approx/rewrite.py",
+    "repro/approx/analyze.py",
+)
+
+FORBIDDEN_IN_INT_DOMAIN = ("numpy", "jax")
+
+
+class Finding(NamedTuple):
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# decorator recognition
+# ---------------------------------------------------------------------------
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.jit' for Attribute/Name chains, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    return _dotted(node) in ("jax.jit", "jit")
+
+
+def _static_argnames(call: ast.Call) -> Optional[Set[str]]:
+    """The static_argnames literal of a jit call, or None if absent /
+    not statically resolvable."""
+    for kw in call.keywords:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            return {v.value}
+        if isinstance(v, (ast.Tuple, ast.List)):
+            names = set()
+            for elt in v.elts:
+                if not (isinstance(elt, ast.Constant)
+                        and isinstance(elt.value, str)):
+                    return None
+                names.add(elt.value)
+            return names
+    return None
+
+
+def _jit_decoration(fn: ast.FunctionDef) -> Optional[Set[str]]:
+    """Static argnames if ``fn`` is jit-decorated (empty set when jit takes
+    no static_argnames), else None."""
+    for dec in fn.decorator_list:
+        if _is_jit_ref(dec):
+            return set()
+        if isinstance(dec, ast.Call):
+            # @jax.jit(static_argnames=...)
+            if _is_jit_ref(dec.func):
+                return _static_argnames(dec) or set()
+            # @functools.partial(jax.jit, static_argnames=...)
+            if (_dotted(dec.func) in ("functools.partial", "partial")
+                    and dec.args and _is_jit_ref(dec.args[0])):
+                return _static_argnames(dec) or set()
+    return None
+
+
+def _param_names(fn: ast.FunctionDef) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in
+             (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _mutable_default_params(fn: ast.FunctionDef) -> Set[str]:
+    """Parameters whose default is a list/dict/set literal (unhashable)."""
+    a = fn.args
+    out: Set[str] = set()
+    pos = [*a.posonlyargs, *a.args]
+    for p, d in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+            out.add(p.arg)
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+            out.add(p.arg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-file checks
+# ---------------------------------------------------------------------------
+
+def _numpy_aliases(tree: ast.Module) -> Set[str]:
+    """Names the file binds to the numpy module (``np``, ``numpy``)."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for al in node.names:
+                if al.name == "numpy" or al.name.startswith("numpy."):
+                    out.add((al.asname or al.name).split(".")[0])
+    return out
+
+
+def _check_int_domain(path: str, tree: ast.Module) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for al in node.names:
+                root = al.name.split(".")[0]
+                if root in FORBIDDEN_IN_INT_DOMAIN:
+                    out.append(Finding(
+                        path, node.lineno, "int-domain",
+                        f"import of '{al.name}' in a pure-int module — "
+                        "the error-bound proofs must not touch "
+                        "float/array semantics"))
+        elif isinstance(node, ast.ImportFrom):
+            root = (node.module or "").split(".")[0]
+            if root in FORBIDDEN_IN_INT_DOMAIN:
+                out.append(Finding(
+                    path, node.lineno, "int-domain",
+                    f"import from '{node.module}' in a pure-int module"))
+        elif isinstance(node, ast.BinOp) and isinstance(node.op, ast.Div):
+            out.append(Finding(
+                path, node.lineno, "int-domain",
+                "true division ('/') in a pure-int module — use '//' or "
+                "shifts; '/' yields float"))
+    return out
+
+
+def _check_jit_body(path: str, fn: ast.FunctionDef, static: Set[str],
+                    np_aliases: Set[str]) -> List[Finding]:
+    out: List[Finding] = []
+    tracer_params = set(_param_names(fn)) - static
+
+    # static_argnames hygiene
+    missing = static - set(_param_names(fn))
+    for name in sorted(missing):
+        out.append(Finding(
+            path, fn.lineno, "static-argnames",
+            f"static_argnames entry '{name}' is not a parameter of "
+            f"{fn.name}()"))
+    for name in sorted(static & _mutable_default_params(fn)):
+        out.append(Finding(
+            path, fn.lineno, "static-argnames",
+            f"static parameter '{name}' of {fn.name}() has an unhashable "
+            "mutable-literal default"))
+
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            hit = sorted({n.id for n in ast.walk(node.test)
+                          if isinstance(n, ast.Name)
+                          and n.id in tracer_params})
+            if hit:
+                kw = "if" if isinstance(node, ast.If) else "while"
+                out.append(Finding(
+                    path, node.lineno, "tracer-branch",
+                    f"Python '{kw}' on traced parameter(s) "
+                    f"{', '.join(hit)} inside jit'd {fn.name}() — use "
+                    "jnp.where/lax.cond or declare them static"))
+        elif isinstance(node, ast.Call):
+            dotted = _dotted(node.func)
+            root = dotted.split(".")[0]
+            if root in np_aliases and "." in dotted:
+                out.append(Finding(
+                    path, node.lineno, "numpy-in-jit",
+                    f"numpy call '{dotted}' inside jit'd {fn.name}() — "
+                    "numpy materializes tracers on host; use jnp"))
+    return out
+
+
+def lint_file(path: Path, *, rel: Optional[str] = None) -> List[Finding]:
+    """Lint one file. ``rel`` (posix, e.g. 'repro/circuit/ir.py') decides
+    int-domain membership; defaults to the path itself."""
+    src = path.read_text()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        return [Finding(str(path), e.lineno or 0, "syntax", str(e.msg))]
+
+    out: List[Finding] = []
+    rel = rel if rel is not None else path.as_posix()
+    if any(rel.endswith(m) for m in INT_DOMAIN_MODULES):
+        out.extend(_check_int_domain(str(path), tree))
+
+    np_aliases = _numpy_aliases(tree)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            static = _jit_decoration(node)
+            if static is not None:
+                out.extend(_check_jit_body(str(path), node, static,
+                                           np_aliases))
+    return out
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    out: List[Finding] = []
+    for p in paths:
+        root = Path(p)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            rel = f.relative_to(root).as_posix() if root.is_dir() \
+                else f.as_posix()
+            out.extend(lint_file(f, rel=rel))
+    return sorted(out, key=lambda f: (f.path, f.line))
+
+
+def main(argv: Sequence[str]) -> int:
+    args = [a for a in argv if not a.startswith("-")]
+    if not args:
+        print(__doc__)
+        return 2
+    findings = lint_paths(args)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"jaxlint: {len(findings)} finding(s)")
+        return 1
+    print(f"jaxlint: clean ({', '.join(args)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
