@@ -9,6 +9,7 @@ benches. Prints ``name,us_per_call,derived`` CSV summaries at the end.
   ga_bench        — GA hot path: serial vs batched population evaluation
   circuit_bench   — bespoke netlist compile / bit-exact sim / delay
   approx_bench    — budgeted circuit approximation + approximation-GA
+  search_bench    — island runtime: throughput / checkpoint / resume cost
 
 ``python -m benchmarks.run [--fast] [--only NAME]``
 """
@@ -19,7 +20,7 @@ import time
 
 from benchmarks import approx_bench, area_table, circuit_bench, \
     dryrun_memory_table, fig1_standalone, fig2_combined, ga_bench, \
-    kernel_bench, roofline_table
+    kernel_bench, roofline_table, search_bench
 
 BENCHES = [
     ("area_table", area_table.main),
@@ -31,6 +32,7 @@ BENCHES = [
     ("ga_bench", ga_bench.main),
     ("circuit_bench", circuit_bench.main),
     ("approx_bench", approx_bench.main),
+    ("search_bench", search_bench.main),
 ]
 
 

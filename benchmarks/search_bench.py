@@ -1,0 +1,151 @@
+"""Search-runtime benchmark: island fleet throughput, checkpoint cost,
+resume overhead.
+
+Three questions about `repro.search` (the fault-tolerant island-model
+NSGA-II runtime), answered on a synthetic evaluator so the numbers isolate
+the *runtime* — not QAT — cost:
+
+* **throughput** — fleet rounds/s (one round = one generation on every
+  island) with checkpointing off;
+* **checkpoint overhead** — extra wall-clock per round with
+  ``checkpoint_every=1`` (full search-state snapshot through
+  `ckpt.CheckpointManager` every round);
+* **resume overhead** — wall-clock to restore a preempted search from its
+  snapshot and drive it to the same final round, vs what the uninterrupted
+  run spent on those remaining rounds. Bit-identity of the resumed Pareto
+  front is asserted, not assumed.
+
+The non-``--fast`` mode adds a real-evaluator data point: a small seeds-MLP
+search through `batch_eval.make_batch_evaluator` with a warm `EvalCache`,
+reporting steady-state generations/s of the full stack.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict
+
+import numpy as np
+
+from repro.core.ga import GAConfig
+from repro.search import (IslandConfig, PreemptedError, SearchConfig,
+                          SearchRuntime)
+from repro.search.faults import FaultHarness, FaultPlan
+
+
+def _synthetic(spec):
+    bits = sum(l.bits for l in spec.layers)
+    sp = sum(l.sparsity for l in spec.layers)
+    return (bits / 16.0, sp)
+
+
+def _cfg(rounds: int, population: int, islands: int,
+         checkpoint_every: int = 0) -> SearchConfig:
+    return SearchConfig(
+        n_layers=2, rounds=rounds,
+        ga=GAConfig(population=population, seed=7),
+        islands=IslandConfig(n_islands=islands, migration_every=2,
+                             migrants=2),
+        checkpoint_every=checkpoint_every)
+
+
+def run(*, rounds: int = 16, population: int = 16,
+        islands: int = 4, real: bool = False) -> Dict:
+    # throughput, checkpointing off
+    t0 = time.time()
+    base = SearchRuntime(_cfg(rounds, population, islands),
+                         evaluate=_synthetic).run()
+    t_plain = time.time() - t0
+
+    with tempfile.TemporaryDirectory() as td:
+        # per-round checkpoint cost
+        t0 = time.time()
+        SearchRuntime(_cfg(rounds, population, islands, checkpoint_every=1),
+                      evaluate=_synthetic, ckpt_root=Path(td) / "a").run()
+        t_ckpt = time.time() - t0
+
+        # preempt halfway, restore, finish — resumed front must be
+        # bit-identical to the uninterrupted run's
+        half = rounds // 2
+        rt = SearchRuntime(_cfg(rounds, population, islands),
+                           evaluate=_synthetic, ckpt_root=Path(td) / "b",
+                           harness=FaultHarness(FaultPlan(preempt_at=half - 1)))
+        try:
+            rt.run()
+        except PreemptedError:
+            pass
+        t0 = time.time()
+        rt2 = SearchRuntime.resume(_cfg(rounds, population, islands),
+                                   Path(td) / "b", evaluate=_synthetic)
+        t_restore = time.time() - t0
+        t0 = time.time()
+        res = rt2.run()
+        t_finish = time.time() - t0
+    assert [s.to_json() for s in res.front_specs] == \
+        [s.to_json() for s in base.front_specs], "resume not bit-identical"
+    np.testing.assert_array_equal(res.front_objectives,
+                                  base.front_objectives)
+
+    out = {
+        "rounds": rounds, "population": population, "islands": islands,
+        "rounds_per_s": rounds / t_plain,
+        "ckpt_overhead_ms_per_round": (t_ckpt - t_plain) / rounds * 1e3,
+        "restore_s": t_restore,
+        # uninterrupted run spends ~ t_plain/2 on the back half; anything
+        # beyond that in restore+finish is the price of the preemption
+        "resume_overhead_s": t_restore + t_finish - t_plain * (1 - half / rounds),
+    }
+
+    if real:
+        from repro.configs.printed_mlp import PRINTED_MLPS
+        from repro.core import batch_eval as BE
+        with tempfile.TemporaryDirectory() as td:
+            mlp = PRINTED_MLPS["seeds"]
+            scfg = SearchConfig(
+                n_layers=len(mlp.layer_dims) - 1, rounds=4,
+                ga=GAConfig(population=8, seed=7,
+                            input_bits=mlp.input_bits),
+                islands=IslandConfig(n_islands=2, migration_every=2))
+
+            def fresh():
+                cache = BE.EvalCache(Path(td) / "evals.json")
+                be = BE.make_batch_evaluator(mlp, epochs=30, seed=0,
+                                             cache=cache)
+                return SearchRuntime(scfg, batch_evaluate=be,
+                                     eval_cache=cache)
+
+            t0 = time.time()
+            fresh().run()                  # cold: jit compiles + QAT
+            t_cold = time.time() - t0
+            t0 = time.time()
+            fresh().run()                  # warm: pure EvalCache replay
+            t_warm = time.time() - t0
+        out.update(real_cold_s_per_round=t_cold / scfg.rounds,
+                   real_warm_s_per_round=t_warm / scfg.rounds)
+    return out
+
+
+def main(fast: bool = False):
+    res = run(real=not fast)
+    print("search_bench (island-model runtime: throughput / checkpoint / "
+          "resume)")
+    print(f"islands={res['islands']} population={res['population']} "
+          f"rounds={res['rounds']} (synthetic evaluator)")
+    print(f"  throughput         {res['rounds_per_s']:8.1f} rounds/s")
+    print(f"  checkpoint         {res['ckpt_overhead_ms_per_round']:8.2f} "
+          "ms/round overhead (checkpoint_every=1)")
+    print(f"  restore            {res['restore_s'] * 1e3:8.2f} ms")
+    print(f"  resume overhead    {res['resume_overhead_s'] * 1e3:8.2f} ms "
+          "(restore + finish - uninterrupted back half)")
+    if "real_cold_s_per_round" in res:
+        print(f"  real seeds search  {res['real_cold_s_per_round']:8.1f} "
+              "s/round cold, "
+              f"{res['real_warm_s_per_round']:8.2f} s/round warm "
+              "(EvalCache replay)")
+    print("  resumed Pareto front bit-identical: PASS")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -28,10 +28,12 @@ from __future__ import annotations
 import dataclasses
 import functools
 import json
+import math
 import os
 import tempfile
+import warnings
 from pathlib import Path
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +47,56 @@ from repro.core.compression_spec import ModelMin
 # Padded k-means slot count: must cover every cluster count the GA can emit
 # (core.ga.CLUSTER_CHOICES tops out at 16).
 K_MAX = 16
+
+
+# ---------------------------------------------------------------------------
+# evaluation quarantine
+# ---------------------------------------------------------------------------
+
+# Worst-case fitness for quarantined specs: finite (inf would poison
+# crowding-distance normalization in NSGA-II) but dominated by every real
+# candidate, so a quarantined spec can never reach a Pareto front.
+QUARANTINE_AREA_MM2 = 1e9
+QUARANTINE_POWER_MW = 1e9
+QUARANTINE_DELAY_LEVELS = 10 ** 9
+
+
+@dataclasses.dataclass
+class QuarantineRecord:
+    """Structured diagnostic for a spec whose evaluation failed.
+
+    A failing candidate (netlist-sim ``OverflowError`` past the 62-bit
+    budget, NaN accuracy out of a diverged QAT finetune, any compile
+    exception) is retried once and then quarantined with worst-case
+    fitness instead of aborting the whole generation — hours of search
+    must not die because one genome broke the toolchain.
+    """
+    spec_json: str
+    stage: str              # "compile" | "score"
+    error: str              # exception class name
+    message: str
+    attempts: int
+
+
+def _worst_case_result(spec: ModelMin) -> MZ.EvalResult:
+    return MZ.EvalResult(spec, 0.0, QUARANTINE_AREA_MM2,
+                         QUARANTINE_POWER_MW, 0,
+                         delay_levels=QUARANTINE_DELAY_LEVELS)
+
+
+# Fault-injection hook (repro.search.faults): called as hook(spec, attempt)
+# at the top of every candidate-evaluation attempt and may raise. None in
+# production — the check is a single attribute load.
+_EVAL_FAULT_HOOK: Optional[Callable[[ModelMin, int], None]] = None
+
+
+def set_eval_fault_hook(hook: Optional[Callable[[ModelMin, int], None]]
+                        ) -> Optional[Callable]:
+    """Install (or clear, with None) the per-candidate fault hook; returns
+    the previous hook so callers can restore it."""
+    global _EVAL_FAULT_HOOK
+    prev, _EVAL_FAULT_HOOK = _EVAL_FAULT_HOOK, hook
+    return prev
 
 
 # ---------------------------------------------------------------------------
@@ -180,6 +232,41 @@ def _population_finetune(params0, bits, ks, masks, x, y, *,
 # ---------------------------------------------------------------------------
 
 
+def _salvage_entries(text: str) -> Dict[str, Dict]:
+    """Best-effort recovery of ``"key": {...}`` pairs from a torn cache
+    JSON. Walks the top-level object entry by entry (keys embed escaped
+    spec JSON, so this uses the real JSON scanner, not a regex) and stops
+    at the first undecodable span — every complete leading entry of a
+    truncated file survives."""
+    out: Dict[str, Dict] = {}
+    decoder = json.JSONDecoder()
+    i = text.find("{")
+    if i < 0:
+        return out
+    i += 1
+    n = len(text)
+    while i < n:
+        while i < n and text[i] in ", \t\r\n":
+            i += 1
+        if i >= n or text[i] != '"':
+            break
+        try:
+            key, i = json.decoder.scanstring(text, i + 1)
+            while i < n and text[i] in " \t\r\n":
+                i += 1
+            if i >= n or text[i] != ":":
+                break
+            i += 1
+            while i < n and text[i] in " \t\r\n":
+                i += 1
+            val, i = decoder.raw_decode(text, i)
+        except (ValueError, IndexError):
+            break
+        if isinstance(val, dict):
+            out[key] = val
+    return out
+
+
 class EvalCache:
     """On-disk cache of spec evaluations with a bounded footprint.
 
@@ -223,14 +310,30 @@ class EvalCache:
         if not self.path.exists():
             return {}
         try:
-            return json.loads(self.path.read_text())
-        except (json.JSONDecodeError, OSError) as e:
-            # a damaged cache must not kill a long search — start
-            # empty; the next flush atomically replaces the file
-            import warnings
+            text = self.path.read_text()
+        except OSError as e:
+            # unreadable file must not kill a long search — start empty;
+            # the next flush atomically replaces it
             warnings.warn(f"EvalCache {self.path} unreadable ({e}); "
                           "starting empty")
             return {}
+        try:
+            return json.loads(text)
+        except json.JSONDecodeError as e:
+            # torn/truncated file (crash mid-write on a non-atomic fs,
+            # disk-full, fault injection): keep the damaged bytes for the
+            # post-mortem and salvage every individually-parseable entry —
+            # a multi-day cache must not be discarded over a torn tail
+            data = _salvage_entries(text)
+            backup = self.path.with_suffix(self.path.suffix + ".corrupt")
+            try:
+                backup.write_text(text)
+            except OSError:
+                pass                       # salvage still proceeds
+            warnings.warn(f"EvalCache {self.path} corrupt ({e}); salvaged "
+                          f"{len(data)} entries, damaged file backed up "
+                          f"to {backup}")
+            return data
 
     @staticmethod
     def key(dataset: str, seed: int, epochs: int, spec: ModelMin,
@@ -312,7 +415,9 @@ class EvalCache:
 
 
 def _compile_and_price(params_pop, specs, masks_serial, xte, yte, *,
-                       netlist: bool = False) -> List[MZ.EvalResult]:
+                       netlist: bool = False,
+                       quarantine: Optional[List[QuarantineRecord]] = None
+                       ) -> List[MZ.EvalResult]:
     """Host-side bespoke compile per candidate + one vectorized pricing
     call for the whole population. Every candidate is additionally lowered
     to its bespoke netlist (`repro.circuit`) for the critical-path delay;
@@ -325,54 +430,107 @@ def _compile_and_price(params_pop, specs, masks_serial, xte, yte, *,
     scored by `approx.evaluate_netlist` — the one shared policy with the
     serial path: bit-exact simulation of the *approximated* netlist for
     accuracy, approximation-aware structural pricing for area/power (the
-    analytic model cannot see truncated circuits)."""
+    analytic model cannot see truncated circuits).
+
+    Per-candidate fault isolation: a candidate whose compile/score raises
+    (or whose accuracy comes back NaN) is retried once and then quarantined
+    with worst-case fitness and a :class:`QuarantineRecord` appended to
+    ``quarantine`` — the rest of the population prices and returns
+    normally. Retrying matters for transient faults (torn files, flaky
+    workers); deterministic failures burn both attempts and quarantine.
+    """
     from repro import approx as AX               # lazy: approx imports us
     from repro import circuit as CIRC            # lazy: circuit imports us
-    compiled = []
-    for p, spec in enumerate(specs):
-        params_p = jax.tree_util.tree_map(lambda a, p=p: a[p], params_pop)
-        compiled.append(MZ.compile_bespoke(params_p, spec, masks_serial[p]))
-    nets = [CIRC.compile_netlist(c) for c in compiled]
-    approx_res = {p: AX.evaluate_netlist(nets[p], compiled[p], spec,
-                                         xte, yte)
-                  for p, spec in enumerate(specs) if spec.has_approx}
-    delays = [n.critical_path_levels() for n in nets]
 
-    accs = [None if s.has_approx                 # scored in approx_res
-            else CIRC.netlist_accuracy(n, c, xte, yte) if netlist
-            else MZ.compiled_accuracy(c, xte, yte)   # exact float emulation
-            for n, c, s in zip(nets, compiled, specs)]
+    full: Dict[int, MZ.EvalResult] = {}   # approx-scored or quarantined
+    compiled: Dict[int, MZ.CompiledMLP] = {}
+    accs: Dict[int, float] = {}
+    delays: Dict[int, int] = {}
+
+    for p, spec in enumerate(specs):
+        err: Optional[BaseException] = None
+        stage = "compile"
+        for attempt in (1, 2):
+            try:
+                if _EVAL_FAULT_HOOK is not None:
+                    _EVAL_FAULT_HOOK(spec, attempt)
+                stage = "compile"
+                params_p = jax.tree_util.tree_map(lambda a, p=p: a[p],
+                                                  params_pop)
+                c = MZ.compile_bespoke(params_p, spec, masks_serial[p])
+                net = CIRC.compile_netlist(c)
+                stage = "score"
+                if spec.has_approx:
+                    r = AX.evaluate_netlist(net, c, spec, xte, yte)
+                    if math.isnan(float(r.accuracy)):
+                        raise FloatingPointError(
+                            "NaN accuracy out of approximated-netlist "
+                            "simulation (diverged QAT finetune?)")
+                    full[p] = r
+                else:
+                    acc = (CIRC.netlist_accuracy(net, c, xte, yte) if netlist
+                           else MZ.compiled_accuracy(c, xte, yte))
+                    if math.isnan(float(acc)):
+                        raise FloatingPointError(
+                            "NaN accuracy out of compiled forward "
+                            "(diverged QAT finetune?)")
+                    compiled[p] = c
+                    accs[p] = float(acc)
+                    delays[p] = net.critical_path_levels()
+                err = None
+                break
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except BaseException as e:
+                err = e
+        if err is not None:
+            rec = QuarantineRecord(spec.to_json(), stage,
+                                   type(err).__name__, str(err), attempts=2)
+            if quarantine is not None:
+                quarantine.append(rec)
+            else:
+                warnings.warn(f"spec quarantined ({rec.stage}: {rec.error}: "
+                              f"{rec.message}); worst-case fitness assigned")
+            full[p] = _worst_case_result(spec)
 
     # stack per-layer integer weights / codebooks and price the whole
-    # population in one hw_model call (pad codebooks to the layer's max k)
-    L = len(compiled[0].q_layers)
-    q_layers, w_bits, clusters = [], [], []
-    for i in range(L):
-        q_layers.append(np.stack([c.q_layers[i] for c in compiled]))
-        w_bits.append(np.array([c.w_bits[i] for c in compiled], np.int64))
-        has = np.array([c.clusters[i] is not None for c in compiled])
-        if has.any():
-            kmax = max(c.clusters[i][1].shape[1]
-                       for c in compiled if c.clusters[i] is not None)
-            d_in, d_out = compiled[0].q_layers[i].shape
-            idx = np.zeros((len(compiled), d_in, d_out), np.int64)
-            cb = np.zeros((len(compiled), d_in, kmax), np.int64)
-            for p, c in enumerate(compiled):
-                if c.clusters[i] is not None:
-                    ci, cc = c.clusters[i]
-                    idx[p] = ci
-                    cb[p, :, :cc.shape[1]] = cc
-            clusters.append((idx, cb, has))
-        else:
-            clusters.append(None)
-    in_bits = np.array([c.input_bits for c in compiled], np.int64)
-    cost = HW.mlp_cost_batch(q_layers, w_bits=w_bits, in_bits=in_bits,
-                             clusters=clusters)
+    # population in one hw_model call (pad codebooks to the layer's max k).
+    # Only cleanly-compiled exact candidates take part; approx-scored and
+    # quarantined ones already carry their full EvalResult.
+    ok = sorted(compiled)
+    cost = None
+    if ok:
+        comp = [compiled[p] for p in ok]
+        L = len(comp[0].q_layers)
+        q_layers, w_bits, clusters = [], [], []
+        for i in range(L):
+            q_layers.append(np.stack([c.q_layers[i] for c in comp]))
+            w_bits.append(np.array([c.w_bits[i] for c in comp], np.int64))
+            has = np.array([c.clusters[i] is not None for c in comp])
+            if has.any():
+                kmax = max(c.clusters[i][1].shape[1]
+                           for c in comp if c.clusters[i] is not None)
+                d_in, d_out = comp[0].q_layers[i].shape
+                idx = np.zeros((len(comp), d_in, d_out), np.int64)
+                cb = np.zeros((len(comp), d_in, kmax), np.int64)
+                for p, c in enumerate(comp):
+                    if c.clusters[i] is not None:
+                        ci, cc = c.clusters[i]
+                        idx[p] = ci
+                        cb[p, :, :cc.shape[1]] = cc
+                clusters.append((idx, cb, has))
+            else:
+                clusters.append(None)
+        in_bits = np.array([c.input_bits for c in comp], np.int64)
+        cost = HW.mlp_cost_batch(q_layers, w_bits=w_bits, in_bits=in_bits,
+                                 clusters=clusters)
 
-    return [approx_res[p] if p in approx_res
-            else MZ.EvalResult(spec, accs[p], float(cost["area_mm2"][p]),
-                               float(cost["power_mw"][p]),
-                               int(cost["n_multipliers"][p]),
+    pos = {p: j for j, p in enumerate(ok)}
+    return [full[p] if p in full
+            else MZ.EvalResult(spec, accs[p],
+                               float(cost["area_mm2"][pos[p]]),
+                               float(cost["power_mw"][pos[p]]),
+                               int(cost["n_multipliers"][pos[p]]),
                                delay_levels=delays[p])
             for p, spec in enumerate(specs)]
 
@@ -380,7 +538,9 @@ def _compile_and_price(params_pop, specs, masks_serial, xte, yte, *,
 def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
                         epochs: int = 150, seed: int = 0,
                         cache: Optional[EvalCache] = None,
-                        netlist: bool = False) -> List[MZ.EvalResult]:
+                        netlist: bool = False,
+                        quarantine: Optional[List[QuarantineRecord]] = None
+                        ) -> List[MZ.EvalResult]:
     """Evaluate a population of specs with ONE vmapped QAT finetune + ONE
     vectorized pricing pass. Order-preserving; duplicates and cache hits
     are evaluated once. Drop-in for `[evaluate_spec(cfg, s) for s in specs]`.
@@ -393,6 +553,11 @@ def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
     whatever ``netlist`` says; they live in the netlist keyspace (their
     genes are part of the spec JSON, so they can never collide with an
     exact entry).
+
+    A candidate whose compile/score fails is retried once, then quarantined
+    with worst-case fitness (never cached, so a fixed toolchain re-evaluates
+    it) and a :class:`QuarantineRecord` appended to ``quarantine`` — one
+    poisoned genome cannot abort the generation.
     """
     specs = list(specs)
     from repro.verify.diagnostics import verify_enabled
@@ -438,12 +603,22 @@ def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
             params0, jnp.asarray(bits), jnp.asarray(ks), masks,
             jnp.asarray(xtr), jnp.asarray(ytr), epochs=epochs, lr=2e-3)
         trained = jax.tree_util.tree_map(lambda a: a[:n_real], trained)
+        recs: List[QuarantineRecord] = []
         for r in _compile_and_price(trained, todo, masks_serial[:n_real],
-                                    xte, yte, netlist=netlist):
+                                    xte, yte, netlist=netlist,
+                                    quarantine=recs):
             results[r.spec.to_json()] = r
-            if cache is not None:
+            if cache is not None and \
+                    all(q.spec_json != r.spec.to_json() for q in recs):
                 cache.put(cfg.name, seed, epochs, r,
                           netlist=netlist or r.spec.has_approx)
+        if recs:
+            if quarantine is not None:
+                quarantine.extend(recs)
+            else:
+                warnings.warn(f"{len(recs)} spec(s) quarantined with "
+                              "worst-case fitness; pass quarantine=[] to "
+                              "collect the structured records")
 
     # flush on hits too: a get() refreshes the entry's LRU stamp, and a
     # long fully-cached resume must persist that recency or a capped
@@ -461,7 +636,9 @@ def make_batch_evaluator(cfg: PrintedMLPConfig, *, epochs: int = 150,
                          cache: Optional[EvalCache] = None,
                          netlist: bool = False,
                          include_delay: bool = False,
-                         record: Optional[Dict[str, MZ.EvalResult]] = None):
+                         record: Optional[Dict[str, MZ.EvalResult]] = None,
+                         quarantine: Optional[List[QuarantineRecord]]
+                         = None):
     """GA adapter: List[ModelMin] -> List[(1 - accuracy, area_mm2[,
     delay_levels])]. Plug into `run_nsga2(..., batch_evaluate=...)`.
 
@@ -472,11 +649,15 @@ def make_batch_evaluator(cfg: PrintedMLPConfig, *, epochs: int = 150,
     example) read Pareto-front delay out of it without re-evaluating.
     Specs carrying approximation genes are handled per candidate by
     `evaluate_population` (simulated approximate netlist + structural
-    pricing) whatever ``netlist`` says.
+    pricing) whatever ``netlist`` says. ``quarantine``, if given, collects
+    the `QuarantineRecord`s of failing specs — share the list with
+    `run_nsga2(quarantine=...)` / the island runtime so quarantined specs
+    surface on the final result.
     """
     def batch_evaluate(specs: Sequence[ModelMin]):
         rs = evaluate_population(cfg, specs, epochs=epochs, seed=seed,
-                                 cache=cache, netlist=netlist)
+                                 cache=cache, netlist=netlist,
+                                 quarantine=quarantine)
         if record is not None:
             record.update((r.spec.to_json(), r) for r in rs)
         if include_delay:

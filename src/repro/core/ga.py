@@ -71,6 +71,25 @@ class GAResult:
     objectives: np.ndarray               # (N, K>=2) minimized
     history: List[Dict]                  # per-generation stats
     evaluations: Dict[str, Tuple[float, ...]]  # spec json -> objectives
+    # specs whose evaluation failed (retried once, then given worst-case
+    # fitness) — `batch_eval.QuarantineRecord`s with the stage/error that
+    # sank them; empty on clean runs
+    quarantined: List = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class GAState:
+    """Resumable NSGA-II state between generations.
+
+    ``rng_state`` is the exact ``random.Random.getstate()`` tuple, so a
+    search advanced one :func:`ga_generation` at a time consumes the same
+    RNG stream as the monolithic :func:`run_nsga2` loop — checkpointed and
+    resumed searches are bit-identical to uninterrupted ones.
+    """
+    population: List[ModelMin]
+    rng_state: Tuple
+    generation: int = 0
+    history: List[Dict] = dataclasses.field(default_factory=list)
 
 
 def _random_gene(rng, cfg: GAConfig) -> LayerMin:
@@ -129,13 +148,107 @@ def _tournament(idx_ranked: List[int], rng) -> int:
     return idx_ranked[min(i, j)]
 
 
+def _ranked_with_fronts(objs: np.ndarray):
+    fronts = non_dominated_sort(objs)
+    ranked: List[int] = []
+    for f in fronts:
+        if len(f) == 0:
+            continue
+        cd = crowding_distance(objs[f])
+        ranked.extend(int(i) for i in f[np.argsort(-cd)])
+    return ranked, fronts
+
+
+def rank_population(objs: np.ndarray) -> List[int]:
+    """Population indices best-first: non-domination rank, crowding-distance
+    tiebreak — the ordering NSGA-II's tournament selection sees. Exposed for
+    the island fleet (elite selection for migration uses the same ranking)."""
+    return _ranked_with_fronts(objs)[0]
+
+
+def init_ga_state(n_layers: int, cfg: GAConfig,
+                  seed_specs: Optional[List[ModelMin]] = None) -> GAState:
+    """Generation-0 state: seed specs + random genomes, RNG stream exported.
+    Byte-identical population to `run_nsga2`'s initialisation."""
+    rng = random.Random(cfg.seed)
+    # propagate input_bits into random genomes: seed specs win, else config
+    input_bits = seed_specs[0].input_bits if seed_specs else cfg.input_bits
+    pop: List[ModelMin] = list(seed_specs or [])
+    while len(pop) < cfg.population:
+        genes = tuple(_random_gene(rng, cfg) for _ in range(n_layers))
+        # the model-level gene is sampled at init like the per-layer ones
+        # (drawn only when approximation is searched: exact configs keep
+        # their historical RNG stream)
+        am = (rng.choice(cfg.argmax_lsb_choices) if cfg.approx_enabled
+              else 0)
+        pop.append(ModelMin(genes, input_bits, am))
+    return GAState(pop, rng.getstate())
+
+
+def ga_generation(state: GAState, cfg: GAConfig,
+                  fit_all: Callable[[List[ModelMin]], np.ndarray], *,
+                  n_children: Optional[int] = None) -> GAState:
+    """One NSGA-II generation as a PURE function: rank, breed, mu+lambda
+    select. Returns a new state; the input state is never mutated, so a
+    caller that catches an exception from `fit_all` (worker death, injected
+    fault) rolls back for free by simply keeping the old state.
+
+    ``n_children`` overrides the offspring count for this generation only
+    (default ``cfg.population`` — the `run_nsga2` behaviour); the island
+    fleet uses it to deal an ejected island's offspring budget over the
+    survivors. Selection pressure is unchanged: the environmental selection
+    still keeps the best ``cfg.population`` of parents+children.
+    """
+    rng = random.Random()
+    rng.setstate(state.rng_state)
+    pop = list(state.population)
+    if n_children is None:
+        n_children = cfg.population
+    objs = fit_all(pop)
+    ranked, fronts = _ranked_with_fronts(objs)
+    entry = {
+        "generation": state.generation,
+        "best_acc": float(1.0 - objs[:, 0].min()),
+        "min_cost": float(objs[:, 1].min()),
+        "front_size": int(len(fronts[0])),
+    }
+    if objs.shape[1] > 2:          # netlist-exact delay objective
+        entry["min_delay"] = float(objs[:, 2].min())
+    # offspring
+    children: List[ModelMin] = []
+    while len(children) < n_children:
+        pa, pb = pop[_tournament(ranked, rng)], pop[_tournament(ranked, rng)]
+        child = _crossover(pa, pb, rng) if rng.random() < cfg.crossover_prob else pa
+        children.append(_mutate(child, rng, cfg))
+    # mu + lambda environmental selection
+    union = pop + children
+    uobjs = fit_all(union)
+    ufronts = non_dominated_sort(uobjs)
+    new_pop: List[ModelMin] = []
+    for f in ufronts:
+        if len(new_pop) + len(f) <= cfg.population:
+            new_pop.extend(union[int(i)] for i in f)
+        else:
+            cd = crowding_distance(uobjs[f])
+            order = f[np.argsort(-cd)]
+            for i in order:
+                if len(new_pop) >= cfg.population:
+                    break
+                new_pop.append(union[int(i)])
+            break
+    return GAState(new_pop, rng.getstate(), state.generation + 1,
+                   [*state.history, entry])
+
+
 def run_nsga2(n_layers: int,
               evaluate: Optional[Callable[[ModelMin], Tuple[float, float]]],
               cfg: Optional[GAConfig] = None,
               seed_specs: Optional[List[ModelMin]] = None, *,
               batch_evaluate: Optional[
                   Callable[[List[ModelMin]], List[Tuple[float, float]]]]
-              = None) -> GAResult:
+              = None,
+              on_generation: Optional[Callable[[GAState], None]] = None,
+              quarantine: Optional[List] = None) -> GAResult:
     """evaluate(spec) -> (obj1, obj2[, ...]), all minimized (every spec
     must return the same arity). Deterministic for a fixed GAConfig.seed.
     Memoizes repeated specs.
@@ -144,12 +257,18 @@ def run_nsga2(n_layers: int,
     every generation's uncached specs are fitted in ONE call — the batched
     engine runs the whole population's QAT finetune in a single jit instead
     of N sequential traces.
+
+    ``on_generation`` is called with the new :class:`GAState` after every
+    generation — the checkpointing hook (`repro.search.runtime` snapshots
+    state there; any exception aborts the search with state intact).
+    ``quarantine``: pass the same list given to
+    `batch_eval.make_batch_evaluator(quarantine=...)` and the records of
+    specs that failed evaluation surface on ``GAResult.quarantined``.
     """
     if evaluate is None and batch_evaluate is None:
         raise ValueError("need evaluate or batch_evaluate")
     if cfg is None:
         cfg = GAConfig()
-    rng = random.Random(cfg.seed)
     cache: Dict[str, Tuple[float, float]] = {}
 
     def fit_all(specs: List[ModelMin]) -> np.ndarray:
@@ -168,61 +287,12 @@ def run_nsga2(n_layers: int,
                 cache[s.to_json()] = tuple(map(float, o))
         return np.array([cache[s.to_json()] for s in specs])
 
-    # propagate input_bits into random genomes: seed specs win, else config
-    input_bits = seed_specs[0].input_bits if seed_specs else cfg.input_bits
-    pop: List[ModelMin] = list(seed_specs or [])
-    while len(pop) < cfg.population:
-        genes = tuple(_random_gene(rng, cfg) for _ in range(n_layers))
-        # the model-level gene is sampled at init like the per-layer ones
-        # (drawn only when approximation is searched: exact configs keep
-        # their historical RNG stream)
-        am = (rng.choice(cfg.argmax_lsb_choices) if cfg.approx_enabled
-              else 0)
-        pop.append(ModelMin(genes, input_bits, am))
-    history = []
+    state = init_ga_state(n_layers, cfg, seed_specs)
+    for _ in range(cfg.generations):
+        state = ga_generation(state, cfg, fit_all)
+        if on_generation is not None:
+            on_generation(state)
 
-    for gen in range(cfg.generations):
-        objs = fit_all(pop)
-        fronts = non_dominated_sort(objs)
-        # rank ordering with crowding tiebreak
-        ranked: List[int] = []
-        for f in fronts:
-            if len(f) == 0:
-                continue
-            cd = crowding_distance(objs[f])
-            ranked.extend([int(i) for i in f[np.argsort(-cd)]])
-        entry = {
-            "generation": gen,
-            "best_acc": float(1.0 - objs[:, 0].min()),
-            "min_cost": float(objs[:, 1].min()),
-            "front_size": int(len(fronts[0])),
-        }
-        if objs.shape[1] > 2:          # netlist-exact delay objective
-            entry["min_delay"] = float(objs[:, 2].min())
-        history.append(entry)
-        # offspring
-        children: List[ModelMin] = []
-        while len(children) < cfg.population:
-            pa, pb = pop[_tournament(ranked, rng)], pop[_tournament(ranked, rng)]
-            child = _crossover(pa, pb, rng) if rng.random() < cfg.crossover_prob else pa
-            children.append(_mutate(child, rng, cfg))
-        # mu + lambda environmental selection
-        union = pop + children
-        uobjs = fit_all(union)
-        ufronts = non_dominated_sort(uobjs)
-        new_pop: List[ModelMin] = []
-        for f in ufronts:
-            if len(new_pop) + len(f) <= cfg.population:
-                new_pop.extend(union[int(i)] for i in f)
-            else:
-                cd = crowding_distance(uobjs[f])
-                order = f[np.argsort(-cd)]
-                for i in order:
-                    if len(new_pop) >= cfg.population:
-                        break
-                    new_pop.append(union[int(i)])
-                break
-        pop = new_pop
-
-    objs = fit_all(pop)
-    return GAResult(pop, objs, history, cache)
+    objs = fit_all(state.population)
+    return GAResult(state.population, objs, state.history, cache,
+                    quarantined=list(quarantine) if quarantine else [])

@@ -1,0 +1,17 @@
+"""Fault-tolerant island-model search runtime.
+
+`islands` — N NSGA-II islands with independent RNG streams, periodic elite
+migration, deadline-based straggler ejection (`dist.fault_tolerance`) and a
+shared evaluation memo over the flock-merged on-disk `EvalCache`.
+`runtime` — checkpoint/resume of the whole fleet via `ckpt.CheckpointManager`;
+a resumed search is bit-identical to the uninterrupted one.
+`faults` — deterministic fault-injection harness (island kills, evaluation
+exceptions, simulated preemption, cache tearing) for the recovery tests.
+"""
+from repro.search.islands import (Island, IslandConfig, IslandFleet,
+                                  IslandKilled)
+from repro.search.runtime import (PreemptedError, SearchConfig, SearchResult,
+                                  SearchRuntime)
+
+__all__ = ["Island", "IslandConfig", "IslandFleet", "IslandKilled",
+           "PreemptedError", "SearchConfig", "SearchResult", "SearchRuntime"]

@@ -1,0 +1,208 @@
+"""Island-model NSGA-II fleet with straggler ejection and kill rollback.
+
+N islands each advance an independent NSGA-II population (`core.ga`'s
+stepped API — per-island `random.Random` streams seeded `cfg.seed + i`),
+sharing one evaluation memo so no spec is ever fitted twice fleet-wide;
+plug `batch_eval.make_batch_evaluator(cache=EvalCache(...))` in as the
+evaluator and the memo extends across processes through the flock-merged
+on-disk cache.
+
+Fault model (all per *round* — one round = one generation on every
+participating island):
+
+* **Stragglers**: before each round every island reports an arrival time
+  (by default its previous round's measured duration; the fault harness
+  injects synthetic ones). `dist.fault_tolerance.deadline_barrier` ejects
+  islands past ``deadline_s`` for the round — their state is simply not
+  advanced — and `redistribute_batch` deals their offspring budget over
+  the participants, so fleet-wide selection throughput is preserved
+  instead of the whole fleet stalling behind one slow worker.
+* **Kills**: an evaluation transport that raises :class:`IslandKilled`
+  mid-generation (worker death) marks the island permanently dead. Because
+  `ga_generation` is a pure function, rollback is free — the island keeps
+  its last committed state, and every evaluation it published before dying
+  stays in the shared memo (zero completed evaluations lost).
+* **Migration**: every ``migration_every`` rounds each live island's top
+  ``migrants`` (non-domination rank, crowding tiebreak) replace the worst
+  members of its ring neighbour. Deterministic — no RNG draws — so the
+  islands' genetic streams are untouched by migration topology.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import ga as GA
+from repro.core.compression_spec import ModelMin
+from repro.dist import fault_tolerance as FT
+
+
+class IslandKilled(RuntimeError):
+    """Raised from inside an island's generation (by the fault harness, or
+    by a real worker transport) to signal the worker died mid-generation.
+    The fleet rolls the island back to its last committed state and marks
+    it dead; the survivors keep searching."""
+
+
+@dataclasses.dataclass
+class IslandConfig:
+    n_islands: int = 4
+    migration_every: int = 2          # rounds between migrations; 0 = never
+    migrants: int = 2                 # elites copied to the ring neighbour
+    deadline_s: float = float("inf")  # per-round straggler deadline
+    redistribute_offspring: bool = True
+
+
+@dataclasses.dataclass
+class Island:
+    index: int
+    cfg: GA.GAConfig                  # per-island (seed = fleet seed + index)
+    state: GA.GAState
+    alive: bool = True                # False once killed — permanent
+    ejections: int = 0                # rounds skipped as a straggler
+    last_duration_s: float = 0.0      # measured; default arrival time
+
+
+class IslandFleet:
+    """The island fleet. Construct, then call :meth:`run_round` until
+    satisfied (`search.runtime.SearchRuntime` adds checkpoint/resume and
+    the result assembly on top)."""
+
+    def __init__(self, n_layers: int, ga_cfg: GA.GAConfig,
+                 icfg: Optional[IslandConfig] = None, *,
+                 evaluate=None, batch_evaluate=None,
+                 seed_specs: Optional[List[ModelMin]] = None,
+                 timer: Optional[Callable[[int, int], float]] = None,
+                 kill_hook: Optional[Callable[[int, int], None]] = None,
+                 quarantine: Optional[List] = None):
+        if evaluate is None and batch_evaluate is None:
+            raise ValueError("need evaluate or batch_evaluate")
+        self.icfg = icfg or IslandConfig()
+        self.evaluate = evaluate
+        self.batch_evaluate = batch_evaluate
+        self.timer = timer or self._default_timer
+        self.kill_hook = kill_hook
+        # seed specs go to island 0 only: duplicating them fleet-wide would
+        # start every island in the same basin
+        self.islands = [
+            Island(i, cfg_i := dataclasses.replace(ga_cfg, seed=ga_cfg.seed + i),
+                   GA.init_ga_state(n_layers, cfg_i,
+                                    seed_specs if i == 0 else None))
+            for i in range(self.icfg.n_islands)]
+        self.evaluations: Dict[str, Tuple[float, ...]] = {}
+        self.round = 0
+        self.events: List[Dict] = []
+        # shared with the evaluator (`make_batch_evaluator(quarantine=...)`)
+        # so failing specs surface on the final SearchResult
+        self.quarantine: List = quarantine if quarantine is not None else []
+
+    # -- evaluation ---------------------------------------------------------
+
+    def _fit_specs(self, specs: List[ModelMin]) -> np.ndarray:
+        todo, seen = [], set()
+        for s in specs:
+            k = s.to_json()
+            if k not in self.evaluations and k not in seen:
+                todo.append(s)
+                seen.add(k)
+        if todo:
+            outs = (self.batch_evaluate(todo) if self.batch_evaluate
+                    else [self.evaluate(s) for s in todo])
+            for s, o in zip(todo, outs):
+                self.evaluations[s.to_json()] = tuple(map(float, o))
+        return np.array([self.evaluations[s.to_json()] for s in specs])
+
+    def _island_fit(self, isl: Island):
+        def fit(specs):
+            objs = self._fit_specs(specs)
+            # the kill hook fires AFTER the results are committed to the
+            # shared memo — modelling a worker that published its
+            # evaluations and died before finishing selection
+            if self.kill_hook is not None:
+                self.kill_hook(isl.index, self.round)
+            return objs
+        return fit
+
+    def _default_timer(self, island_index: int, round_idx: int) -> float:
+        return self.islands[island_index].last_duration_s
+
+    # -- rounds -------------------------------------------------------------
+
+    def run_round(self) -> None:
+        r = self.round
+        if not any(isl.alive for isl in self.islands):
+            raise RuntimeError("island fleet: every island is dead")
+        times = [self.timer(isl.index, r) if isl.alive else float("inf")
+                 for isl in self.islands]
+        made = FT.deadline_barrier(times, self.icfg.deadline_s)
+        participate = [m and isl.alive
+                       for m, isl in zip(made, self.islands)]
+        if not any(participate):
+            # every live island straggled: waive the deadline for the round
+            # rather than deadlock the fleet behind its own barrier
+            participate = [isl.alive for isl in self.islands]
+            self.events.append({"round": r, "event": "all_straggle_waived"})
+        # deal the non-participants' per-round offspring budget over the
+        # participants: fleet-wide selection throughput survives ejections
+        extra = sum(isl.cfg.population
+                    for isl, p in zip(self.islands, participate) if not p)
+        if extra and self.icfg.redistribute_offspring:
+            deal = FT.redistribute_batch(extra, participate)
+        else:
+            deal = {i: 0 for i in range(len(self.islands))}
+        for isl, p in zip(self.islands, participate):
+            if not p:
+                if isl.alive:
+                    isl.ejections += 1
+                    self.events.append(
+                        {"round": r, "island": isl.index,
+                         "event": "straggler_ejected",
+                         "arrival_s": float(times[isl.index])})
+                continue
+            t0 = time.monotonic()
+            try:
+                isl.state = GA.ga_generation(
+                    isl.state, isl.cfg, self._island_fit(isl),
+                    n_children=isl.cfg.population + deal[isl.index])
+            except IslandKilled as e:
+                # pure-function rollback: state was never touched; its
+                # published evaluations stay in the shared memo
+                isl.alive = False
+                self.events.append({"round": r, "island": isl.index,
+                                    "event": "killed", "error": str(e)})
+            isl.last_duration_s = time.monotonic() - t0
+        self.round += 1
+        if (self.icfg.migration_every
+                and self.round % self.icfg.migration_every == 0):
+            self._migrate()
+
+    # -- migration ----------------------------------------------------------
+
+    def _migrate(self) -> None:
+        alive = [isl for isl in self.islands if isl.alive]
+        m = self.icfg.migrants
+        if len(alive) < 2 or m <= 0:
+            return
+        # all ranks computed on pre-migration populations (simultaneous
+        # exchange); populations are post-generation, so every member is
+        # already in the shared memo — no new evaluations here
+        ranked = {isl.index: GA.rank_population(
+            self._fit_specs(isl.state.population)) for isl in alive}
+        staged: Dict[int, List[ModelMin]] = {}
+        for pos, src in enumerate(alive):
+            dst = alive[(pos + 1) % len(alive)]
+            elite = [src.state.population[j] for j in ranked[src.index][:m]]
+            newpop = list(dst.state.population)
+            # worst-ranked members of the receiver make room for the elites
+            for slot, spec in zip(reversed(ranked[dst.index]), elite):
+                newpop[slot] = spec
+            staged[dst.index] = newpop
+        for isl in alive:
+            if isl.index in staged:
+                isl.state = dataclasses.replace(isl.state,
+                                                population=staged[isl.index])
+        self.events.append({"round": self.round, "event": "migration",
+                            "migrants": m, "islands": len(alive)})

@@ -257,6 +257,43 @@ def test_cache_cap_survives_merge_and_uncapped_by_default(tmp_path):
     assert len(BE.EvalCache(tmp_path / "uncapped.json")) == len(SPECS)
 
 
+def test_cache_corrupt_file_salvaged_with_backup(tmp_path):
+    """A truncated cache file (crash mid-write, disk-full) must not cost
+    the whole cache: `_read` backs the damaged bytes up to `.corrupt` and
+    salvages every individually-parseable leading entry."""
+    path = tmp_path / "evals.json"
+    cache = BE.EvalCache(path)
+    for i, s in enumerate(SPECS[:4]):
+        cache.put(CFG.name, 0, 30, MZ.EvalResult(s, 0.9, float(i), 1.0, 1,
+                                                 delay_levels=10 + i))
+    cache.flush()
+    whole = path.read_text()
+    # tear the file mid-way through the last entry's value
+    path.write_text(whole[:int(len(whole) * 0.8)])
+
+    with pytest.warns(UserWarning, match="salvaged"):
+        torn = BE.EvalCache(path)
+    assert path.with_suffix(".json.corrupt").read_text() == \
+        whole[:int(len(whole) * 0.8)]
+    # every complete leading entry survived, the torn tail did not
+    assert 1 <= len(torn) < 4
+    hit = torn.get(CFG.name, 0, 30, SPECS[0])
+    assert hit is not None and hit.area_mm2 == 0.0 and hit.delay_levels == 10
+    # the next flush atomically rewrites a whole file again
+    torn.put(CFG.name, 0, 30, MZ.EvalResult(SPECS[4], 0.9, 9.0, 1.0, 1))
+    torn.flush()
+    assert len(BE.EvalCache(path)) == len(torn)
+
+
+def test_cache_unparseable_garbage_starts_empty(tmp_path):
+    path = tmp_path / "evals.json"
+    path.write_text("not json at all")
+    with pytest.warns(UserWarning, match="salvaged 0 entries"):
+        cache = BE.EvalCache(path)
+    assert len(cache) == 0
+    assert path.with_suffix(".json.corrupt").exists()
+
+
 def test_cache_skips_retraining(tmp_path, monkeypatch):
     cache = BE.EvalCache(tmp_path / "evals.json")
     specs = SPECS[:2]

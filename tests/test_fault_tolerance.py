@@ -1,0 +1,67 @@
+"""Edge cases of the deadline/straggler primitives (`dist.fault_tolerance`)
+that the island-model search runtime now leans on."""
+import pytest
+
+from repro.dist import fault_tolerance as FT
+
+
+def test_deadline_barrier_basic():
+    assert FT.deadline_barrier([0.1, 2.0, 0.5], 1.0) == [True, False, True]
+    # boundary is inclusive: arriving exactly at the deadline participates
+    assert FT.deadline_barrier([1.0], 1.0) == [True]
+
+
+def test_deadline_barrier_infinite_deadline_admits_all_but_inf():
+    inf = float("inf")
+    # inf <= inf — a dead host reporting inf still "makes" an infinite
+    # deadline; callers (the island fleet) must mask dead hosts themselves
+    assert FT.deadline_barrier([0.0, inf], inf) == [True, True]
+
+
+def test_redistribute_all_hosts_straggle_raises():
+    with pytest.raises(RuntimeError):
+        FT.redistribute_batch(128, [False, False, False])
+    with pytest.raises(RuntimeError):
+        FT.redistribute_batch(0, [])
+
+
+def test_redistribute_single_survivor_takes_everything():
+    deal = FT.redistribute_batch(100, [False, True, False, False])
+    assert deal == {0: 0, 1: 100, 2: 0, 3: 0}
+
+
+def test_redistribute_zero_batch():
+    deal = FT.redistribute_batch(0, [True, True, True])
+    assert deal == {0: 0, 1: 0, 2: 0}
+    assert sum(deal.values()) == 0
+
+
+@pytest.mark.parametrize("batch,alive", [
+    (7, [True, True, True]),          # odd over 3
+    (10, [True, False, True, True]),  # odd share over 3 survivors
+    (1, [True, True]),                # fewer examples than hosts
+    (97, [True] * 8),
+])
+def test_redistribute_sums_exact_and_balanced(batch, alive):
+    deal = FT.redistribute_batch(batch, alive)
+    assert sum(deal.values()) == batch
+    shares = [deal[i] for i, ok in enumerate(alive) if ok]
+    dead = [deal[i] for i, ok in enumerate(alive) if not ok]
+    assert all(d == 0 for d in dead)
+    assert max(shares) - min(shares) <= 1
+
+
+def test_should_checkpoint_now_cadence():
+    hits = [s for s in range(1, 11)
+            if FT.should_checkpoint_now(s, every=3,
+                                        preemption_requested=False)]
+    assert hits == [3, 6, 9]
+
+
+def test_should_checkpoint_now_preemption_overrides():
+    # off-cadence step still checkpoints under a preemption notice
+    assert FT.should_checkpoint_now(7, every=3, preemption_requested=True)
+    # even with cadence disabled entirely
+    assert FT.should_checkpoint_now(7, every=0, preemption_requested=True)
+    assert not FT.should_checkpoint_now(7, every=0,
+                                        preemption_requested=False)
