@@ -13,14 +13,23 @@ the batched objectives from the serial ones (the engines are designed to
 match exactly; the acceptance bar is 1e-3). A warm second batched
 generation is also timed — that is the steady-state GA cost, where the
 population jit is already compiled.
+
+The warm generation is then re-run under a live `repro.obs` tracer: the
+bench emits the trace JSONL (eval.batch / eval.finetune /
+eval.compile_price spans for the whole stack) and reports the relative
+tracing overhead against the untraced warm lap.
 """
 from __future__ import annotations
 
 import random
+import tempfile
 import time
+from pathlib import Path
 from typing import Dict, List
 
 import numpy as np
+
+from repro.obs import trace as TR
 
 from repro.configs.printed_mlp import PRINTED_MLPS
 from repro.core import batch_eval as BE
@@ -60,6 +69,18 @@ def run(dataset: str = "whitewine", *, population: int = 16,
     BE.evaluate_population(cfg, gen1, epochs=epochs, seed=seed)
     t_warm = time.time() - t0
 
+    # same warm generation under a live tracer: emit the trace file and
+    # price the telemetry against the untraced warm lap
+    trace_path = Path(tempfile.mkdtemp(prefix="repro_obs_bench_")) \
+        / "ga_bench_trace.jsonl"
+    with TR.capture(trace_path):
+        t0 = time.time()
+        BE.evaluate_population(cfg, gen1, epochs=epochs, seed=seed)
+        t_traced = time.time() - t0
+    records, damaged = TR.read_trace(trace_path)
+    assert damaged == 0 and records, "bench trace unreadable"
+    trace_overhead = max(0.0, t_traced / t_warm - 1.0)
+
     sobj = np.array([(1.0 - r.accuracy, r.area_mm2) for r in serial])
     bobj = np.array([(1.0 - r.accuracy, r.area_mm2) for r in batched])
     dev = np.abs(sobj - bobj)
@@ -73,6 +94,10 @@ def run(dataset: str = "whitewine", *, population: int = 16,
         "speedup": t_serial / t_batched,
         "speedup_warm": t_serial / t_warm,
         "max_objective_deviation": max_dev,
+        "t_traced_s": t_traced,
+        "trace_overhead_pct": trace_overhead * 100.0,
+        "trace_path": str(trace_path),
+        "trace_records": len(records),
     }
 
 
@@ -90,6 +115,9 @@ def main(fast: bool = False):
           f"({res['speedup_warm']:.1f}x)  <- steady-state GA cost")
     print(f"  max objective deviation vs serial: "
           f"{res['max_objective_deviation']:.2e} (bar: 1e-3)")
+    print(f"  tracing overhead {res['trace_overhead_pct']:6.2f} % on the "
+          f"warm lap ({res['trace_records']} records -> "
+          f"{res['trace_path']})")
     ok = res["speedup"] >= 3.0 and res["max_objective_deviation"] <= 1e-3
     print(f"  acceptance (>=3x, <=1e-3): {'PASS' if ok else 'FAIL'}")
     return res

@@ -11,12 +11,19 @@ benches. Prints ``name,us_per_call,derived`` CSV summaries at the end.
   approx_bench    — budgeted circuit approximation + approximation-GA
   search_bench    — island runtime: throughput / checkpoint / resume cost
 
-``python -m benchmarks.run [--fast] [--only NAME]``
+``python -m benchmarks.run [--fast] [--only NAME] [--compare BASELINE]``
+
+``--compare`` reads a previously-saved ``name,us_per_call,...`` CSV (e.g.
+the committed ``benchmarks/baseline.csv``) and warns on every bench whose
+wall-clock regressed more than 15% against it — names missing on either
+side are skipped, so partial runs (``--only``) compare cleanly.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from pathlib import Path
+from typing import Dict
 
 from benchmarks import approx_bench, area_table, circuit_bench, \
     dryrun_memory_table, fig1_standalone, fig2_combined, ga_bench, \
@@ -36,13 +43,42 @@ BENCHES = [
 ]
 
 
+def load_baseline(path) -> Dict[str, float]:
+    """``name,us_per_call[,...]`` CSV -> {name: us}. Header lines and
+    unparsable rows are skipped."""
+    out: Dict[str, float] = {}
+    for line in Path(path).read_text().splitlines():
+        parts = line.strip().split(",")
+        if len(parts) < 2 or parts[0] == "name":
+            continue
+        try:
+            out[parts[0]] = float(parts[1])
+        except ValueError:
+            continue
+    return out
+
+
+def compare_against(baseline: Dict[str, float], current: Dict[str, float],
+                    threshold: float = 0.15) -> Dict[str, float]:
+    """{name: relative slowdown} for benches slower than baseline by more
+    than ``threshold`` (0.15 = 15%)."""
+    return {name: us / baseline[name] - 1.0
+            for name, us in current.items()
+            if name in baseline and baseline[name] > 0
+            and us > baseline[name] * (1.0 + threshold)}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--compare", default=None, metavar="BASELINE_CSV",
+                    help="warn on benches >15%% slower than this "
+                         "name,us_per_call CSV")
     args = ap.parse_args()
 
     csv = []
+    current: Dict[str, float] = {}
     for name, fn in BENCHES:
         if args.only and name != args.only:
             continue
@@ -50,10 +86,19 @@ def main() -> None:
         t0 = time.time()
         fn(fast=args.fast)
         us = (time.time() - t0) * 1e6
+        current[name] = us
         csv.append(f"{name},{us:.0f},see-above")
     print("\nname,us_per_call,derived")
     for line in csv:
         print(line)
+
+    if args.compare:
+        regressions = compare_against(load_baseline(args.compare), current)
+        for name, slow in sorted(regressions.items()):
+            print(f"WARNING: {name} regressed {slow * 100:.0f}% vs "
+                  f"{args.compare} (>15% threshold)")
+        if not regressions:
+            print(f"compare: no >15% regressions vs {args.compare}")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,13 @@ the *runtime* — not QAT — cost:
 The non-``--fast`` mode adds a real-evaluator data point: a small seeds-MLP
 search through `batch_eval.make_batch_evaluator` with a warm `EvalCache`,
 reporting steady-state generations/s of the full stack.
+
+A fourth question covers the observability layer (`repro.obs`): the same
+synthetic fleet is driven untraced and under a live tracer (best-of-N
+each), the relative overhead is asserted under 3%, and the off-path is
+held to its contract — no `Tracer` is ever constructed when tracing is
+off (all obs file IO flows through `Tracer`, so zero instances means zero
+extra syscalls).
 """
 from __future__ import annotations
 
@@ -29,6 +36,7 @@ from typing import Dict
 import numpy as np
 
 from repro.core.ga import GAConfig
+from repro.obs import trace as TR
 from repro.search import (IslandConfig, PreemptedError, SearchConfig,
                           SearchRuntime)
 from repro.search.faults import FaultHarness, FaultPlan
@@ -48,6 +56,56 @@ def _cfg(rounds: int, population: int, islands: int,
         islands=IslandConfig(n_islands=islands, migration_every=2,
                              migrants=2),
         checkpoint_every=checkpoint_every)
+
+
+def tracing_overhead(*, rounds: int = 16, population: int = 16,
+                     islands: int = 4, repeats: int = 3) -> Dict:
+    """Traced vs untraced fleet wall-clock, best-of-``repeats`` each.
+
+    The untraced laps run under an instrumented ``Tracer.__init__`` so the
+    zero-syscalls-when-off contract is checked, not assumed: any Tracer
+    constructed while the flag is off is a bug (there is no other path to
+    obs file IO)."""
+    cfg = lambda: _cfg(rounds, population, islands)  # noqa: E731
+
+    def lap() -> float:
+        t0 = time.perf_counter()
+        SearchRuntime(cfg(), evaluate=_synthetic).run()
+        return time.perf_counter() - t0
+
+    constructed: list = []
+    init = TR.Tracer.__init__
+
+    def counting_init(self, path):
+        constructed.append(str(path))
+        init(self, path)
+
+    TR.Tracer.__init__ = counting_init
+    try:
+        assert not TR.active(), "bench must start with tracing off"
+        t_off = min(lap() for _ in range(repeats))
+        assert not constructed, \
+            f"Tracer constructed with tracing off: {constructed}"
+    finally:
+        TR.Tracer.__init__ = init
+
+    td = Path(tempfile.mkdtemp(prefix="repro_obs_bench_"))
+    t_on = float("inf")
+    trace_path = td / "search_bench_trace.jsonl"
+    for i in range(repeats):
+        p = td / f"lap{i}.jsonl" if i < repeats - 1 else trace_path
+        with TR.capture(p):
+            t0 = time.perf_counter()
+            SearchRuntime(cfg(), evaluate=_synthetic).run()
+            t_on = min(t_on, time.perf_counter() - t0)
+    records, damaged = TR.read_trace(trace_path)
+    assert damaged == 0 and records, "bench trace unreadable"
+    overhead = max(0.0, t_on / t_off - 1.0)
+    return {
+        "t_untraced_s": t_off, "t_traced_s": t_on,
+        "overhead_pct": overhead * 100.0,
+        "trace_path": str(trace_path), "trace_records": len(records),
+    }
 
 
 def run(*, rounds: int = 16, population: int = 16,
@@ -128,6 +186,7 @@ def run(*, rounds: int = 16, population: int = 16,
 
 def main(fast: bool = False):
     res = run(real=not fast)
+    res.update(tracing_overhead())
     print("search_bench (island-model runtime: throughput / checkpoint / "
           "resume)")
     print(f"islands={res['islands']} population={res['population']} "
@@ -143,6 +202,11 @@ def main(fast: bool = False):
               "s/round cold, "
               f"{res['real_warm_s_per_round']:8.2f} s/round warm "
               "(EvalCache replay)")
+    print(f"  tracing overhead   {res['overhead_pct']:8.2f} % "
+          f"({res['trace_records']} records -> {res['trace_path']})")
+    assert res["overhead_pct"] < 3.0, \
+        f"tracing overhead {res['overhead_pct']:.2f}% exceeds the 3% budget"
+    print("  tracing overhead < 3%: PASS (0 Tracer instances when off)")
     print("  resumed Pareto front bit-identical: PASS")
     return res
 

@@ -1,0 +1,73 @@
+"""Traced 2-island search -> trace JSONL: the obs acceptance path.
+
+``python -m benchmarks.search_bench_trace [--trace PATH] [--real]`` drives
+a 2-island NSGA-II search under a live `repro.obs` tracer and leaves the
+trace file behind for ``python -m repro.obs.report``. The default is the
+synthetic evaluator (seconds, used by CI to produce the uploaded
+trace+report artifacts); ``--real`` runs the seeds printed-MLP through the
+batched QAT evaluator instead, so the trace carries eval.finetune /
+eval.compile_price spans with their compile-vs-steady split.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+from pathlib import Path
+
+from repro.core.ga import GAConfig
+from repro.obs import trace as TR
+from repro.search import IslandConfig, SearchConfig, SearchRuntime
+
+
+def _synthetic(spec):
+    bits = sum(l.bits for l in spec.layers)
+    sp = sum(l.sparsity for l in spec.layers)
+    return (bits / 16.0, sp)
+
+
+def run(trace_path, *, real: bool = False, rounds: int = 4) -> Path:
+    trace_path = Path(trace_path)
+    with TR.capture(trace_path):
+        if real:
+            from repro.configs.printed_mlp import PRINTED_MLPS
+            from repro.core import batch_eval as BE
+            mlp = PRINTED_MLPS["seeds"]
+            cfg = SearchConfig(
+                n_layers=len(mlp.layer_dims) - 1, rounds=rounds,
+                ga=GAConfig(population=6, seed=7,
+                            input_bits=mlp.input_bits),
+                islands=IslandConfig(n_islands=2, migration_every=2,
+                                     migrants=1))
+            with tempfile.TemporaryDirectory() as td:
+                cache = BE.EvalCache(Path(td) / "evals.json")
+                be = BE.make_batch_evaluator(mlp, epochs=8, seed=0,
+                                             cache=cache)
+                SearchRuntime(cfg, batch_evaluate=be,
+                              eval_cache=cache).run()
+        else:
+            cfg = SearchConfig(
+                n_layers=2, rounds=rounds,
+                ga=GAConfig(population=8, seed=7),
+                islands=IslandConfig(n_islands=2, migration_every=2,
+                                     migrants=1))
+            SearchRuntime(cfg, evaluate=_synthetic).run()
+    return trace_path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default="search_trace.jsonl")
+    ap.add_argument("--real", action="store_true",
+                    help="seeds printed-MLP through the batched QAT "
+                         "evaluator instead of the synthetic one")
+    ap.add_argument("--rounds", type=int, default=4)
+    args = ap.parse_args()
+    p = run(args.trace, real=args.real, rounds=args.rounds)
+    records, damaged = TR.read_trace(p)
+    print(f"wrote {len(records)} records to {p}"
+          + (f" ({damaged} damaged)" if damaged else ""))
+    print("render with: python -m repro.obs.report", p)
+
+
+if __name__ == "__main__":
+    main()

@@ -148,12 +148,41 @@ class PassManager:
         self.verify = verify
 
     def run(self, net: ir.Netlist) -> ir.Netlist:
+        from repro.obs import trace as TR
         from repro.verify.diagnostics import verify_enabled
         if not verify_enabled(self.verify):
+            if TR.active():
+                return self._run_traced(net)
             for p in self.passes:
                 net = p.run(net)
             return rebuild(net, dce=True)
         return self._run_verified(net)
+
+    def _run_traced(self, net: ir.Netlist) -> ir.Netlist:
+        """The unverified pipeline under tracing: per-pass spans carrying
+        the structural-cost and proven-bound deltas each pass bought.
+        Deltas are measured on DCE'd snapshots (a rewrite orphans the
+        subnets it replaces), which costs one extra rebuild per pass —
+        priced only when ``REPRO_TRACE`` is on."""
+        from repro.approx.analyze import logit_error_bound
+        from repro.circuit.cost import structural_cost
+        from repro.obs import metrics as MT
+        from repro.obs import trace as TR
+        snap = rebuild(net, dce=True)
+        cost = structural_cost(snap).total_fa
+        bound = logit_error_bound(snap)
+        for p in self.passes:
+            with TR.span("approx.pass", pass_name=p.name) as sp:
+                net = p.run(net)
+                snap = rebuild(net, dce=True)
+                c2 = structural_cost(snap).total_fa
+                b2 = logit_error_bound(snap)
+                sp.set(cost_delta=round(c2 - cost, 6),
+                       bound_delta=int(b2 - bound))
+            MT.counter("approx.passes").inc()
+            MT.histogram("approx.pass.cost_delta").observe(c2 - cost)
+            cost, bound = c2, b2
+        return snap
 
     def _run_verified(self, net: ir.Netlist) -> ir.Netlist:
         from repro.approx.analyze import (decision_error_bound,
@@ -175,14 +204,22 @@ class PassManager:
             return snap, structural_cost(snap).total_fa, (
                 logit_error_bound(snap), decision_error_bound(snap))
 
+        from repro.obs import metrics as MT
+        from repro.obs import trace as TR
+
         # strict conventions are demanded of a pass only when its input
         # already met them (compiler outputs do; hand-built IR need not)
         strict = not check_netlist(net)
         snap, cost, bounds = measure(net)
         for p in self.passes:
-            net = p.run(net)
-            raw = (logit_error_bound(net), decision_error_bound(net))
-            snap, c2, b2 = measure(net)
+            with TR.span("approx.pass", pass_name=p.name) as sp:
+                net = p.run(net)
+                raw = (logit_error_bound(net), decision_error_bound(net))
+                snap, c2, b2 = measure(net)
+                sp.set(cost_delta=round(c2 - cost, 6),
+                       bound_delta=int(b2[0] - bounds[0]))
+            MT.counter("approx.passes").inc()
+            MT.histogram("approx.pass.cost_delta").observe(c2 - cost)
             check_netlist(snap, strict=strict, expect_dce=True)
             if raw != b2:
                 fail("pass-bound",

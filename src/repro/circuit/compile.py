@@ -129,16 +129,21 @@ def compile_netlist(c: "MZ.CompiledMLP") -> ir.Netlist:
     """CompiledMLP (integer weights + codebooks + scales from the QAT
     compile) -> bespoke netlist. The returned netlist is validated: args
     in topo order, every width <= 62 bits (exact int64 simulation)."""
-    net = ir.Netlist(in_bits=c.input_bits, w_bits=c.w_bits)
-    acts = [net.input(j) for j in range(c.q_layers[0].shape[0])]
-    b_ints = MZ.integer_biases(c)
-    n_layers = len(c.q_layers)
-    for i, (q, b) in enumerate(zip(c.q_layers, b_ints)):
-        acts, _ = _lower_layer(net, acts, q, b, c.clusters[i], layer=i,
-                               relu=(i < n_layers - 1))
-    net.output_ids = list(net.layer_pre_ids[-1])
-    net.argmax(net.output_ids)
-    net.validate()
+    from repro.obs import metrics as MT
+    from repro.obs import trace as TR
+    with TR.span("circuit.compile") as sp:
+        net = ir.Netlist(in_bits=c.input_bits, w_bits=c.w_bits)
+        acts = [net.input(j) for j in range(c.q_layers[0].shape[0])]
+        b_ints = MZ.integer_biases(c)
+        n_layers = len(c.q_layers)
+        for i, (q, b) in enumerate(zip(c.q_layers, b_ints)):
+            acts, _ = _lower_layer(net, acts, q, b, c.clusters[i], layer=i,
+                                   relu=(i < n_layers - 1))
+        net.output_ids = list(net.layer_pre_ids[-1])
+        net.argmax(net.output_ids)
+        net.validate()
+        sp.set(nodes=len(net.nodes))
+    MT.counter("circuit.compiles").inc()
     from repro.verify.diagnostics import verify_enabled
     if verify_enabled():
         # the compiler's own output contract, beyond structural soundness:

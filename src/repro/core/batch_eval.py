@@ -43,6 +43,8 @@ from repro.configs.printed_mlp import PrintedMLPConfig
 from repro.core import hw_model as HW
 from repro.core import minimize as MZ
 from repro.core.compression_spec import ModelMin
+from repro.obs import metrics as MT
+from repro.obs import trace as TR
 
 # Padded k-means slot count: must cover every cluster count the GA can emit
 # (core.ga.CLUSTER_CHOICES tops out at 16).
@@ -333,6 +335,9 @@ class EvalCache:
             warnings.warn(f"EvalCache {self.path} corrupt ({e}); salvaged "
                           f"{len(data)} entries, damaged file backed up "
                           f"to {backup}")
+            MT.counter("cache.salvages").inc()
+            TR.event("cache.salvage", path=str(self.path),
+                     salvaged=len(data))
             return data
 
     @staticmethod
@@ -348,7 +353,9 @@ class EvalCache:
             netlist: bool = False) -> Optional[MZ.EvalResult]:
         d = self._data.get(self.key(dataset, seed, epochs, spec, netlist))
         if d is None:
+            MT.counter("cache.miss").inc()
             return None
+        MT.counter("cache.hit").inc()
         self._touch(d)                  # LRU: a hit keeps the entry young
         self._touched += 1
         return MZ.EvalResult(ModelMin.from_json(d["spec"]), d["accuracy"],
@@ -372,6 +379,11 @@ class EvalCache:
         # re-read/merge/rewrite: skip (recency persistence is best-effort)
         if not self._dirty and self._touched < self.TOUCH_FLUSH_EVERY:
             return
+        with TR.span("cache.flush", entries=len(self._data)):
+            MT.counter("cache.flushes").inc()
+            self._flush_locked()
+
+    def _flush_locked(self) -> None:
         self.path.parent.mkdir(parents=True, exist_ok=True)
         # merge concurrent writers under an flock'd sidecar: entries
         # flushed by another process since our last read survive; on a key
@@ -486,6 +498,9 @@ def _compile_and_price(params_pop, specs, masks_serial, xte, yte, *,
         if err is not None:
             rec = QuarantineRecord(spec.to_json(), stage,
                                    type(err).__name__, str(err), attempts=2)
+            MT.counter(f"eval.quarantine.{stage}").inc()
+            TR.event("eval.quarantine", stage=stage, error=rec.error,
+                     message=rec.message, spec=rec.spec_json)
             if quarantine is not None:
                 quarantine.append(rec)
             else:
@@ -587,6 +602,12 @@ def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
             todo.append(s)
             queued.add(k)
 
+    MT.counter("eval.specs_requested").inc(len(specs))
+    MT.counter("eval.specs_cached").inc(n_hits)
+    MT.counter("eval.specs_evaluated").inc(len(todo))
+    TR.event("eval.batch", dataset=cfg.name, requested=len(specs),
+             hits=n_hits, evaluated=len(todo))
+
     if todo:
         n_real = len(todo)
         # pad to a power-of-two bucket by repeating the last spec: the jit
@@ -599,14 +620,25 @@ def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
         bits, ks = stack_specs(padded)
         stacked, masks_serial = stack_masks(params0, padded)
         masks = tuple(jnp.asarray(m) for m in stacked)
-        trained = _population_finetune(
-            params0, jnp.asarray(bits), jnp.asarray(ks), masks,
-            jnp.asarray(xtr), jnp.asarray(ytr), epochs=epochs, lr=2e-3)
-        trained = jax.tree_util.tree_map(lambda a: a[:n_real], trained)
+        # the span wraps DISPATCH of the population jit (never runs inside
+        # traced code); the first call per (dataset, bucket, epochs) pays
+        # XLA compilation and is tagged so reports split compile_ms out
+        with TR.span("eval.finetune", dataset=cfg.name, bucket=bucket,
+                     n=n_real,
+                     first=TR.first_call(("finetune", cfg.name, bucket,
+                                          epochs))):
+            trained = _population_finetune(
+                params0, jnp.asarray(bits), jnp.asarray(ks), masks,
+                jnp.asarray(xtr), jnp.asarray(ytr), epochs=epochs, lr=2e-3)
+            trained = jax.tree_util.tree_map(
+                lambda a: np.asarray(a[:n_real]), trained)
         recs: List[QuarantineRecord] = []
-        for r in _compile_and_price(trained, todo, masks_serial[:n_real],
-                                    xte, yte, netlist=netlist,
-                                    quarantine=recs):
+        with TR.span("eval.compile_price", dataset=cfg.name, n=n_real):
+            priced = _compile_and_price(trained, todo,
+                                        masks_serial[:n_real],
+                                        xte, yte, netlist=netlist,
+                                        quarantine=recs)
+        for r in priced:
             results[r.spec.to_json()] = r
             if cache is not None and \
                     all(q.spec_json != r.spec.to_json() for q in recs):

@@ -57,9 +57,21 @@ def crowding_distance(points: np.ndarray) -> np.ndarray:
     return d
 
 
+def first_front_mask(points: np.ndarray) -> np.ndarray:
+    """Boolean mask of non-dominated points (minimization). Vectorized —
+    three array ops on an (N, N, M) broadcast instead of the per-pair
+    python loop, so it is the right primitive for hot paths (per-generation
+    trace stats, the final front over every memoized evaluation)."""
+    pts = np.asarray(points, float)
+    a, b = pts[:, None, :], pts[None, :, :]
+    dominated = ((b <= a).all(-1) & (b < a).any(-1)).any(1)
+    return ~dominated
+
+
 def pareto_front(points: np.ndarray) -> np.ndarray:
-    """Indices of the first front."""
-    return non_dominated_sort(np.asarray(points, float))[0]
+    """Indices of the first front — same set and order as
+    ``non_dominated_sort(points)[0]``."""
+    return np.flatnonzero(first_front_mask(points))
 
 
 def hypervolume_2d(points: np.ndarray, ref: Tuple[float, float]) -> float:

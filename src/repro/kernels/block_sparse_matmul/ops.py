@@ -8,17 +8,34 @@ import jax
 
 from repro.kernels.block_sparse_matmul.kernel import block_sparse_matmul_pallas
 from repro.kernels.block_sparse_matmul.ref import block_sparse_matmul_ref
+from repro.obs import trace as TR
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "interpret"))
-def block_sparse_matmul(x, w, block_mask, *, block_m=128, block_n=128,
-                        block_k=128, interpret: bool | None = None):
+def _block_sparse_matmul_jit(x, w, block_mask, *, block_m, block_n, block_k,
+                             interpret):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return block_sparse_matmul_pallas(
         x, w, block_mask, block_m=block_m, block_n=block_n, block_k=block_k,
         interpret=interpret)
+
+
+def block_sparse_matmul(x, w, block_mask, *, block_m=128, block_n=128,
+                        block_k=128, interpret: bool | None = None):
+    if not TR.active():
+        return _block_sparse_matmul_jit(x, w, block_mask, block_m=block_m,
+                                        block_n=block_n, block_k=block_k,
+                                        interpret=interpret)
+    key = ("block_sparse_matmul", x.shape, w.shape, block_m, block_n, block_k)
+    with TR.span("kernels.block_sparse_matmul", m=x.shape[0], k=x.shape[1],
+                 n=w.shape[1], first=TR.first_call(key)):
+        y = _block_sparse_matmul_jit(x, w, block_mask, block_m=block_m,
+                                     block_n=block_n, block_k=block_k,
+                                     interpret=interpret)
+        jax.block_until_ready(y)
+    return y
 
 
 __all__ = ["block_sparse_matmul", "block_sparse_matmul_ref"]

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.kernels.clustered_matmul.kernel import clustered_matmul_pallas
 from repro.kernels.clustered_matmul.ref import clustered_matmul_ref
+from repro.obs import trace as TR
 
 
 def _pad_to(a, mult, axis, value=0):
@@ -21,8 +22,8 @@ def _pad_to(a, mult, axis, value=0):
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "interpret"))
-def clustered_matmul(x, idx, codebook, *, block_m=128, block_n=128,
-                     block_k=128, interpret: bool | None = None):
+def _clustered_matmul_jit(x, idx, codebook, *, block_m, block_n, block_k,
+                          interpret):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     M, N = x.shape[0], idx.shape[1]
@@ -33,6 +34,22 @@ def clustered_matmul(x, idx, codebook, *, block_m=128, block_n=128,
     y = clustered_matmul_pallas(xp, ip, cp, block_m=block_m, block_n=block_n,
                                 block_k=block_k, interpret=interpret)
     return y[:M, :N]
+
+
+def clustered_matmul(x, idx, codebook, *, block_m=128, block_n=128,
+                     block_k=128, interpret: bool | None = None):
+    if not TR.active():
+        return _clustered_matmul_jit(x, idx, codebook, block_m=block_m,
+                                     block_n=block_n, block_k=block_k,
+                                     interpret=interpret)
+    key = ("clustered_matmul", x.shape, idx.shape, block_m, block_n, block_k)
+    with TR.span("kernels.clustered_matmul", m=x.shape[0], k=x.shape[1],
+                 n=idx.shape[1], first=TR.first_call(key)):
+        y = _clustered_matmul_jit(x, idx, codebook, block_m=block_m,
+                                  block_n=block_n, block_k=block_k,
+                                  interpret=interpret)
+        jax.block_until_ready(y)
+    return y
 
 
 __all__ = ["clustered_matmul", "clustered_matmul_ref"]

@@ -8,15 +8,14 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.obs import trace as TR
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
                                              "block_q", "block_k",
                                              "interpret"))
-def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
-                    block_q=128, block_k=128, interpret: bool | None = None):
-    """q: (B, T, H, hd); k/v: (B, S, KV, hd) with H % KV == 0.
-    Returns (B, T, H, hd)."""
+def _flash_attention_jit(q, k, v, *, causal, window, softcap,
+                         block_q, block_k, interpret):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     B, T, H, hd = q.shape
@@ -43,6 +42,25 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
                                softcap=softcap, block_q=bq, block_k=bk,
                                interpret=interpret)
     o = o[:, :T].reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+    return o
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128, interpret: bool | None = None):
+    """q: (B, T, H, hd); k/v: (B, S, KV, hd) with H % KV == 0.
+    Returns (B, T, H, hd)."""
+    if not TR.active():
+        return _flash_attention_jit(q, k, v, causal=causal, window=window,
+                                    softcap=softcap, block_q=block_q,
+                                    block_k=block_k, interpret=interpret)
+    key = ("flash_attention", q.shape, k.shape, causal, window, softcap,
+           block_q, block_k)
+    with TR.span("kernels.flash_attention", b=q.shape[0], t=q.shape[1],
+                 h=q.shape[2], s=k.shape[1], first=TR.first_call(key)):
+        o = _flash_attention_jit(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, block_q=block_q,
+                                 block_k=block_k, interpret=interpret)
+        jax.block_until_ready(o)
     return o
 
 

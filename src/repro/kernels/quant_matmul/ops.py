@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
 from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from repro.obs import trace as TR
 
 
 def _pad_to(a, mult, axis):
@@ -21,10 +22,8 @@ def _pad_to(a, mult, axis):
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "interpret"))
-def quant_matmul(x, w_q, scales, *, block_m=128, block_n=128, block_k=128,
-                 interpret: bool | None = None):
-    """y = x @ dequant(w_q, scales). Shapes padded to block multiples; the
-    kernel runs interpret=True off-TPU (correctness path on this container)."""
+def _quant_matmul_jit(x, w_q, scales, *, block_m, block_n, block_k,
+                      interpret):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     M, N = x.shape[0], w_q.shape[1]
@@ -34,6 +33,24 @@ def quant_matmul(x, w_q, scales, *, block_m=128, block_n=128, block_k=128,
     y = quant_matmul_pallas(xp, wp, sp, block_m=block_m, block_n=block_n,
                             block_k=block_k, interpret=interpret)
     return y[:M, :N]
+
+
+def quant_matmul(x, w_q, scales, *, block_m=128, block_n=128, block_k=128,
+                 interpret: bool | None = None):
+    """y = x @ dequant(w_q, scales). Shapes padded to block multiples; the
+    kernel runs interpret=True off-TPU (correctness path on this container)."""
+    if not TR.active():
+        return _quant_matmul_jit(x, w_q, scales, block_m=block_m,
+                                 block_n=block_n, block_k=block_k,
+                                 interpret=interpret)
+    key = ("quant_matmul", x.shape, w_q.shape, block_m, block_n, block_k)
+    with TR.span("kernels.quant_matmul", m=x.shape[0], k=x.shape[1],
+                 n=w_q.shape[1], first=TR.first_call(key)):
+        y = _quant_matmul_jit(x, w_q, scales, block_m=block_m,
+                              block_n=block_n, block_k=block_k,
+                              interpret=interpret)
+        jax.block_until_ready(y)
+    return y
 
 
 __all__ = ["quant_matmul", "quant_matmul_ref"]

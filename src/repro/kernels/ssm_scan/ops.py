@@ -8,12 +8,13 @@ import jax.numpy as jnp
 
 from repro.kernels.ssm_scan.kernel import ssm_scan_pallas
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.obs import trace as TR
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "block_t",
                                              "interpret"))
-def ssm_scan(u, dt, B_, C_, A, D, *, block_d=None, block_t=8,
-             interpret: bool | None = None):
+def _ssm_scan_jit(u, dt, B_, C_, A, D, *, block_d, block_t,
+                  interpret):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     Bsz, T, d = u.shape
@@ -31,6 +32,20 @@ def ssm_scan(u, dt, B_, C_, A, D, *, block_d=None, block_t=8,
     y = ssm_scan_pallas(u, dt, B_, C_, A, D, block_d=block_d,
                         block_t=block_t, interpret=interpret)
     return y[:, :T, :d]
+
+
+def ssm_scan(u, dt, B_, C_, A, D, *, block_d=None, block_t=8,
+             interpret: bool | None = None):
+    if not TR.active():
+        return _ssm_scan_jit(u, dt, B_, C_, A, D, block_d=block_d,
+                             block_t=block_t, interpret=interpret)
+    key = ("ssm_scan", u.shape, B_.shape, block_d, block_t)
+    with TR.span("kernels.ssm_scan", b=u.shape[0], t=u.shape[1],
+                 d=u.shape[2], first=TR.first_call(key)):
+        y = _ssm_scan_jit(u, dt, B_, C_, A, D, block_d=block_d,
+                          block_t=block_t, interpret=interpret)
+        jax.block_until_ready(y)
+    return y
 
 
 __all__ = ["ssm_scan", "ssm_scan_ref"]

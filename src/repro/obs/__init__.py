@@ -1,0 +1,25 @@
+"""Search-runtime observability: ambient tracing, metrics, run reports.
+
+Three pieces, all zero-cost when off (the ``REPRO_TRACE`` idiom, mirroring
+``REPRO_VERIFY``):
+
+* `repro.obs.trace` — nestable host-side spans and structured events,
+  appended as torn-write-safe JSONL;
+* `repro.obs.metrics` — the process-wide counter/gauge/histogram registry,
+  snapshotted into every search checkpoint and restored bit-identically on
+  resume;
+* `repro.obs.report` — ``python -m repro.obs.report trace.jsonl`` renders
+  wall-clock breakdowns, per-island timelines, Pareto progress, cache-hit
+  curves and the fault/quarantine ledger (plus CSVs).
+
+`repro.obs.ring.RingLog` is the bounded in-memory event log the search
+runtime uses so long runs spill their full event stream to the trace
+instead of growing lists without bound.
+"""
+from repro.obs import metrics
+from repro.obs.ring import RingLog
+from repro.obs.trace import (active, capture, event, first_call, read_trace,
+                             span, start, stop)
+
+__all__ = ["RingLog", "active", "capture", "event", "first_call",
+           "metrics", "read_trace", "span", "start", "stop"]

@@ -37,7 +37,11 @@ import numpy as np
 
 from repro.core import ga as GA
 from repro.core.compression_spec import ModelMin
+from repro.core.pareto import pareto_front
 from repro.dist import fault_tolerance as FT
+from repro.obs import metrics as MT
+from repro.obs import trace as TR
+from repro.obs.ring import RingLog
 
 
 class IslandKilled(RuntimeError):
@@ -54,6 +58,12 @@ class IslandConfig:
     migrants: int = 2                 # elites copied to the ring neighbour
     deadline_s: float = float("inf")  # per-round straggler deadline
     redistribute_offspring: bool = True
+    # in-memory caps for the fleet event / quarantine logs: only the newest
+    # N stay resident (the full streams spill to the obs trace when
+    # REPRO_TRACE is on) — a week-long run can't grow the process without
+    # bound. `RingLog.total`/`.dropped` keep the true counts.
+    event_buffer: int = 1024
+    quarantine_buffer: int = 1024
 
 
 @dataclasses.dataclass
@@ -94,10 +104,19 @@ class IslandFleet:
             for i in range(self.icfg.n_islands)]
         self.evaluations: Dict[str, Tuple[float, ...]] = {}
         self.round = 0
-        self.events: List[Dict] = []
+        # bounded in memory; every append also lands in the obs trace (the
+        # JSONL is the complete stream, the ring is the working set)
+        self.events: RingLog = RingLog(
+            self.icfg.event_buffer,
+            spill=lambda e: TR.event(
+                "fleet." + (e.get("event", "event")
+                            if isinstance(e, dict) else "event"),
+                **(e if isinstance(e, dict) else {"item": e})))
         # shared with the evaluator (`make_batch_evaluator(quarantine=...)`)
-        # so failing specs surface on the final SearchResult
-        self.quarantine: List = quarantine if quarantine is not None else []
+        # so failing specs surface on the final SearchResult; callers may
+        # pass their own (possibly unbounded) list and keep old behaviour
+        self.quarantine = (quarantine if quarantine is not None
+                           else RingLog(self.icfg.quarantine_buffer))
 
     # -- evaluation ---------------------------------------------------------
 
@@ -108,6 +127,11 @@ class IslandFleet:
             if k not in self.evaluations and k not in seen:
                 todo.append(s)
                 seen.add(k)
+        MT.counter("fleet.specs_requested").inc(len(specs))
+        MT.counter("fleet.specs_memoized").inc(len(specs) - len(todo))
+        MT.counter("fleet.specs_fitted").inc(len(todo))
+        TR.event("fleet.fit", round=self.round, requested=len(specs),
+                 memoized=len(specs) - len(todo), fitted=len(todo))
         if todo:
             outs = (self.batch_evaluate(todo) if self.batch_evaluate
                     else [self.evaluate(s) for s in todo])
@@ -135,6 +159,14 @@ class IslandFleet:
         r = self.round
         if not any(isl.alive for isl in self.islands):
             raise RuntimeError("island fleet: every island is dead")
+        with TR.span("fleet.round", round=r):
+            self._run_round_inner(r)
+        MT.counter("fleet.rounds").inc()
+        if (self.icfg.migration_every
+                and self.round % self.icfg.migration_every == 0):
+            self._migrate()
+
+    def _run_round_inner(self, r: int) -> None:
         times = [self.timer(isl.index, r) if isl.alive else float("inf")
                  for isl in self.islands]
         made = FT.deadline_barrier(times, self.icfg.deadline_s)
@@ -157,6 +189,7 @@ class IslandFleet:
             if not p:
                 if isl.alive:
                     isl.ejections += 1
+                    MT.counter("island.ejections").inc()
                     self.events.append(
                         {"round": r, "island": isl.index,
                          "event": "straggler_ejected",
@@ -164,20 +197,40 @@ class IslandFleet:
                 continue
             t0 = time.monotonic()
             try:
-                isl.state = GA.ga_generation(
-                    isl.state, isl.cfg, self._island_fit(isl),
-                    n_children=isl.cfg.population + deal[isl.index])
+                with TR.span("island.generation", island=isl.index,
+                             round=r, generation=isl.state.generation):
+                    isl.state = GA.ga_generation(
+                        isl.state, isl.cfg, self._island_fit(isl),
+                        n_children=isl.cfg.population + deal[isl.index])
+                MT.counter("island.generations").inc()
+                self._trace_front(isl, r)
             except IslandKilled as e:
                 # pure-function rollback: state was never touched; its
                 # published evaluations stay in the shared memo
                 isl.alive = False
+                MT.counter("island.kills").inc()
                 self.events.append({"round": r, "island": isl.index,
                                     "event": "killed", "error": str(e)})
             isl.last_duration_s = time.monotonic() - t0
         self.round += 1
-        if (self.icfg.migration_every
-                and self.round % self.icfg.migration_every == 0):
-            self._migrate()
+
+    def _trace_front(self, isl: Island, r: int) -> None:
+        """Per-generation front stats into the trace (tracing-only: the
+        rank over memoized objectives is recomputed here, never drawn from
+        the RNG, so trajectories are identical with tracing on or off)."""
+        if not TR.active():
+            return
+        h = isl.state.history[-1] if isl.state.history else {}
+        objs = np.asarray([self.evaluations[s.to_json()]
+                           for s in isl.state.population], float)
+        # first front only, vectorized — the generic per-pair
+        # non_dominated_sort would tax every traced generation
+        first = pareto_front(objs)
+        front = [[round(float(v), 6) for v in objs[int(i)]] for i in first]
+        TR.event("ga.front", island=isl.index, round=r,
+                 generation=isl.state.generation,
+                 best_acc=h.get("best_acc"), min_cost=h.get("min_cost"),
+                 front_size=len(front), front=front)
 
     # -- migration ----------------------------------------------------------
 
@@ -204,5 +257,7 @@ class IslandFleet:
             if isl.index in staged:
                 isl.state = dataclasses.replace(isl.state,
                                                 population=staged[isl.index])
+        MT.counter("fleet.migrations").inc()
+        MT.counter("fleet.migrants_accepted").inc(m * len(staged))
         self.events.append({"round": self.round, "event": "migration",
                             "migrants": m, "islands": len(alive)})

@@ -17,6 +17,7 @@ assert byte-equal Pareto fronts for kills at every round.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -26,6 +27,9 @@ from repro.core import ga as GA
 from repro.core.compression_spec import ModelMin
 from repro.core.pareto import pareto_front
 from repro.dist import fault_tolerance as FT
+from repro.obs import metrics as MT
+from repro.obs import trace as TR
+from repro.obs.ring import RingLog
 from repro.search.islands import IslandConfig, IslandFleet
 
 
@@ -104,6 +108,9 @@ class SearchRuntime:
                     preemption_requested=preempt):
                 self.checkpoint()
             if preempt:
+                TR.event("runtime.preempt", round=self.fleet.round,
+                         checkpointed=self.mgr is not None)
+                TR.flush()        # the process is about to die: drain now
                 raise PreemptedError(
                     f"preempted after round {self.fleet.round} "
                     "(checkpoint flushed)" if self.mgr is not None else
@@ -132,10 +139,25 @@ class SearchRuntime:
     def checkpoint(self) -> None:
         if self.mgr is None:
             raise RuntimeError("no checkpoint root configured")
+        # the metrics snapshot is packed BEFORE the write is accounted, so
+        # the restored registry reflects exactly the counters at save time
+        # (write timings live in histograms, outside the bit-identity
+        # invariant — see repro.obs.metrics)
         tree, meta = self._pack()
-        self.mgr.save(self.fleet.round, tree, meta=meta)
-        if self.eval_cache is not None:
-            self.eval_cache.flush()
+        with TR.span("runtime.checkpoint", round=self.fleet.round) as sp:
+            t0 = time.monotonic()
+            self.mgr.save(self.fleet.round, tree, meta=meta)
+            ms = (time.monotonic() - t0) * 1e3
+            MT.histogram("ckpt.write_ms").observe(ms)
+            if TR.active():
+                step_dir = (self.mgr.root
+                            / f"step_{self.fleet.round:08d}")
+                nbytes = sum(f.stat().st_size
+                             for f in step_dir.iterdir() if f.is_file())
+                MT.histogram("ckpt.write_bytes").observe(nbytes)
+                sp.set(bytes=nbytes, ms=round(ms, 3))
+            if self.eval_cache is not None:
+                self.eval_cache.flush()
 
     def _pack(self):
         islands = self.fleet.islands
@@ -163,9 +185,18 @@ class SearchRuntime:
             "rng_gauss": gauss,
             "evaluations": {k: list(v)
                             for k, v in self.fleet.evaluations.items()},
-            "events": self.fleet.events,
+            # rings persist their resident tail + true totals; the obs
+            # trace (when on) holds the complete streams
+            "events": list(self.fleet.events),
+            "events_total": getattr(self.fleet.events, "total",
+                                    len(self.fleet.events)),
             "quarantined": [dataclasses.asdict(q)
                             for q in self.fleet.quarantine],
+            "quarantine_total": getattr(self.fleet.quarantine, "total",
+                                        len(self.fleet.quarantine)),
+            # the whole metrics registry rides along so resume() restores
+            # monotone counters bit-identically
+            "metrics": MT.snapshot(),
         }
         return tree, meta
 
@@ -178,7 +209,10 @@ class SearchRuntime:
         Continue with ``.run()`` — the continuation is bit-identical to the
         run that was killed."""
         mgr = CheckpointManager(ckpt_root, keep=cfg.keep, async_write=False)
-        tree, meta = mgr.restore(step, like={"rng": 0, "generation": 0})
+        with TR.span("runtime.resume") as sp:
+            tree, meta = mgr.restore(step, like={"rng": 0, "generation": 0})
+            if tree is not None:
+                sp.set(round=int(meta["round"]))
         if tree is None:
             raise FileNotFoundError(f"no checkpoint under {ckpt_root}")
         rt = cls(cfg, evaluate=evaluate, batch_evaluate=batch_evaluate,
@@ -200,11 +234,20 @@ class SearchRuntime:
         fleet.round = int(meta["round"])
         fleet.evaluations = {k: tuple(v)
                              for k, v in meta["evaluations"].items()}
-        fleet.events = list(meta["events"])
+        fleet.events[:] = list(meta["events"])
+        if isinstance(fleet.events, RingLog):
+            fleet.events.total = int(meta.get("events_total",
+                                              len(fleet.events)))
         # in-place so a caller-shared quarantine list (also wired into the
         # evaluator) keeps collecting into the same object
         fleet.quarantine[:] = [_record_from_dict(q)
                                for q in meta["quarantined"]]
+        if isinstance(fleet.quarantine, RingLog):
+            fleet.quarantine.total = int(meta.get(
+                "quarantine_total", len(fleet.quarantine)))
+        # restored counters are bit-identical to the values at save time:
+        # the continuation increments from exactly where the dead run stood
+        MT.restore(meta.get("metrics"))
         return rt
 
 

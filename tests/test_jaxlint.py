@@ -112,3 +112,33 @@ def test_cli_exit_codes(tmp_path, capsys):
     assert jaxlint.main([str(bad)]) == 1
     assert jaxlint.main([]) == 2
     capsys.readouterr()
+
+
+def test_obs_in_jit_flagged(tmp_path):
+    src = ("import functools\n"
+           "import jax\n"
+           "from repro.obs import trace as TR\n"
+           "from repro.obs import metrics as MT\n"
+           "from repro.obs.trace import span\n"
+           "@functools.partial(jax.jit, static_argnames=('n',))\n"
+           "def f(x, *, n=2):\n"
+           "    with TR.span('bad'):\n"
+           "        MT.counter('c').inc()\n"
+           "    span('also bad')\n"
+           "    return x\n")
+    findings = _lint_src(src, tmp_path)
+    assert _rules(findings) == ["obs-in-jit"] * 3
+    assert "host-side" in findings[0].message
+
+
+def test_obs_outside_jit_not_flagged(tmp_path):
+    src = ("import jax\n"
+           "from repro.obs import trace as TR\n"
+           "@jax.jit\n"
+           "def _f_jit(x):\n"
+           "    return x + 1\n"
+           "def f(x):\n"
+           "    with TR.span('kernels.f'):\n"      # dispatch span: fine
+           "        y = _f_jit(x)\n"
+           "    return y\n")
+    assert _lint_src(src, tmp_path) == []

@@ -1,0 +1,332 @@
+"""Observability layer (`repro.obs`): tracer contracts, torn-tail salvage,
+bounded ring logs, metrics snapshot/restore through checkpoint/resume
+(counter bit-identity), and the run-report renderer against a committed
+golden trace."""
+import contextlib
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core.ga import GAConfig
+from repro.obs import metrics as MT
+from repro.obs import report
+from repro.obs import trace as TR
+from repro.obs.ring import RingLog
+from repro.search import (IslandConfig, PreemptedError, SearchConfig,
+                          SearchRuntime)
+from repro.search.faults import FaultHarness, FaultPlan
+
+DATA = Path(__file__).resolve().parent / "data"
+
+
+@contextlib.contextmanager
+def _tracing_off():
+    """Detach any ambient tracer (CI runs this file under REPRO_TRACE=1 to
+    exercise telemetry on the fault paths; the off-path contracts below
+    need tracing genuinely off)."""
+    prev, TR._tracer = TR._tracer, None
+    try:
+        yield
+    finally:
+        TR._tracer = prev
+
+
+# ---------------------------------------------------------------------------
+# tracer: off-path contract, span nesting, exception safety
+# ---------------------------------------------------------------------------
+
+
+def test_off_path_is_inert(tmp_path):
+    """With no tracer installed: null span, no first-call tracking, and no
+    Tracer (the only obs path to file IO) is ever constructed."""
+    constructed = []
+    init = TR.Tracer.__init__
+
+    def counting(self, path):
+        constructed.append(str(path))
+        init(self, path)
+
+    TR.Tracer.__init__ = counting
+    try:
+        with _tracing_off():
+            assert not TR.active()
+            with TR.span("anything", a=1) as sp:
+                sp.set(b=2)
+            TR.event("anything", x=1)
+            assert TR.first_call("k") is False
+            assert TR.first_call("k") is False
+            assert TR.tracing_to() is None
+    finally:
+        TR.Tracer.__init__ = init
+    assert constructed == []
+
+
+def test_span_nesting_depth_and_attrs(tmp_path):
+    p = tmp_path / "t.jsonl"
+    with TR.capture(p):
+        with TR.span("outer", a=1) as sp:
+            with TR.span("inner"):
+                TR.event("tick", n=3)
+            sp.set(late=True)
+    recs, damaged = TR.read_trace(p)
+    assert damaged == 0
+    assert [r["kind"] for r in recs] == ["meta", "event", "span", "span"]
+    ev, inner, outer = recs[1], recs[2], recs[3]
+    assert ev["name"] == "tick" and ev["attrs"] == {"n": 3}
+    # spans emit on exit: inner closes first, depths record the nesting
+    assert inner["name"] == "inner" and inner["depth"] == 1
+    assert outer["name"] == "outer" and outer["depth"] == 0
+    assert outer["attrs"] == {"a": 1, "late": True}
+    assert outer["dur"] >= inner["dur"] >= 0
+
+
+def test_span_exception_recorded_and_propagated(tmp_path):
+    p = tmp_path / "t.jsonl"
+    with TR.capture(p):
+        with pytest.raises(ValueError):
+            with TR.span("boom"):
+                raise ValueError("x")
+    recs, _ = TR.read_trace(p)
+    boom = [r for r in recs if r.get("name") == "boom"]
+    assert len(boom) == 1 and boom[0]["error"] == "ValueError"
+
+
+def test_first_call_once_per_key_per_tracer(tmp_path):
+    with TR.capture(tmp_path / "a.jsonl"):
+        assert TR.first_call(("k", 1)) is True
+        assert TR.first_call(("k", 1)) is False
+        assert TR.first_call(("k", 2)) is True
+    with TR.capture(tmp_path / "b.jsonl"):
+        # a fresh tracer is a fresh process-lifetime: compile again
+        assert TR.first_call(("k", 1)) is True
+
+
+def test_capture_restores_previous_tracer(tmp_path):
+    outer, inner = tmp_path / "outer.jsonl", tmp_path / "inner.jsonl"
+    with _tracing_off():
+        with TR.capture(outer):
+            with TR.capture(inner):
+                TR.event("in")
+            assert TR.tracing_to() == outer
+            TR.event("out")
+        assert not TR.active()
+    assert [r["name"] for r in TR.read_trace(inner)[0]
+            if r["kind"] == "event"] == ["in"]
+    assert [r["name"] for r in TR.read_trace(outer)[0]
+            if r["kind"] == "event"] == ["out"]
+
+
+def test_read_trace_salvages_torn_tail(tmp_path):
+    p = tmp_path / "t.jsonl"
+    with TR.capture(p):
+        for i in range(10):
+            TR.event("e", i=i)
+    whole = p.read_bytes()
+    torn = tmp_path / "torn.jsonl"
+    torn.write_bytes(whole[:-17])           # tear the last record mid-line
+    recs, damaged = TR.read_trace(torn)
+    assert damaged == 1
+    events = [r for r in recs if r["kind"] == "event"]
+    assert [e["attrs"]["i"] for e in events] == list(range(9))
+
+
+def test_default_path_from_env(monkeypatch):
+    monkeypatch.setenv(TR.ENV_FLAG, "1")
+    assert TR.default_path() == Path("repro_trace.jsonl")
+    monkeypatch.setenv(TR.ENV_FLAG, "/tmp/run7.jsonl")
+    assert TR.default_path() == Path("/tmp/run7.jsonl")
+
+
+# ---------------------------------------------------------------------------
+# ring log
+# ---------------------------------------------------------------------------
+
+
+def test_ringlog_bounds_and_counts():
+    r = RingLog(cap=3)
+    for i in range(7):
+        r.append(i)
+    assert list(r) == [4, 5, 6]
+    assert len(r) == 3 and r.total == 7 and r.dropped == 4
+    assert r[0] == 4 and r[-1] == 6 and r[1:] == [5, 6]
+
+
+def test_ringlog_spills_every_append():
+    spilled = []
+    r = RingLog(cap=2, spill=spilled.append)
+    r.extend([{"event": "a"}, {"event": "b"}, {"event": "c"}])
+    assert list(r) == [{"event": "b"}, {"event": "c"}]   # ring keeps a tail
+    assert spilled == [{"event": "a"}, {"event": "b"}, {"event": "c"}]
+
+
+def test_ringlog_full_slice_restore_bypasses_spill():
+    spilled = []
+    r = RingLog(cap=4, spill=spilled.append)
+    r.extend([1, 2, 3])
+    r[:] = [8, 9]                          # checkpoint-restore idiom
+    assert list(r) == [8, 9] and r.total == 2 and r.dropped == 0
+    assert spilled == [1, 2, 3]            # restore did not re-spill
+    with pytest.raises(TypeError):
+        r[0] = 5                           # only full-slice assignment
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_snapshot_restore_roundtrip():
+    reg = MT.MetricsRegistry()
+    reg.counter("c").inc(3)
+    reg.gauge("g").set(2.5)
+    h = reg.histogram("h")
+    h.observe(1.0)
+    h.observe(3.0)
+    snap = reg.snapshot()
+    assert snap["counters"] == {"c": 3}
+    assert snap["histograms"]["h"] == {"count": 2, "sum": 4.0,
+                                       "min": 1.0, "max": 3.0}
+    reg2 = MT.MetricsRegistry()
+    reg2.restore(snap)
+    assert reg2.snapshot() == snap
+    assert json.dumps(snap, sort_keys=True)  # checkpoint-serializable
+
+
+def test_metrics_snapshot_key_order_deterministic():
+    reg = MT.MetricsRegistry()
+    reg.counter("z").inc()
+    reg.counter("a").inc()
+    assert list(reg.snapshot()["counters"]) == ["a", "z"]
+
+
+# ---------------------------------------------------------------------------
+# counter bit-identity across preempt + resume
+# ---------------------------------------------------------------------------
+
+
+def _synthetic(spec):
+    bits = sum(l.bits for l in spec.layers)
+    sp = sum(l.sparsity for l in spec.layers)
+    return (bits / 16.0, sp)
+
+
+def _cfg():
+    return SearchConfig(
+        n_layers=2, rounds=4,
+        ga=GAConfig(population=6, seed=3),
+        islands=IslandConfig(n_islands=2, migration_every=2, migrants=1))
+
+
+def test_counters_bit_identical_across_preempt_resume(tmp_path):
+    """The metric-counter contract: counters hold exact integer counts of
+    deterministic search quantities, so a preempted-and-resumed run ends
+    with exactly the uninterrupted run's counters (gauges/histograms carry
+    wall-clock and are exempt)."""
+    MT.REGISTRY.reset()
+    SearchRuntime(_cfg(), evaluate=_synthetic).run()
+    uninterrupted = MT.snapshot()["counters"]
+
+    MT.REGISTRY.reset()
+    rt = SearchRuntime(_cfg(), evaluate=_synthetic, ckpt_root=tmp_path,
+                       harness=FaultHarness(FaultPlan(preempt_at=1)))
+    with pytest.raises(PreemptedError):
+        rt.run()
+    MT.REGISTRY.reset()                    # simulate the fresh process
+    SearchRuntime.resume(_cfg(), tmp_path, evaluate=_synthetic).run()
+    resumed = MT.snapshot()["counters"]
+
+    assert uninterrupted  # the run did count things
+    assert resumed == uninterrupted
+
+
+def test_checkpoint_meta_carries_ring_totals_and_metrics(tmp_path):
+    MT.REGISTRY.reset()
+    rt = SearchRuntime(_cfg(), evaluate=_synthetic, ckpt_root=tmp_path,
+                       harness=FaultHarness(FaultPlan(preempt_at=1)))
+    with pytest.raises(PreemptedError):
+        rt.run()
+    MT.REGISTRY.reset()
+    rt2 = SearchRuntime.resume(_cfg(), tmp_path, evaluate=_synthetic)
+    # restore() reinstated the registry from checkpoint meta, not zero
+    assert MT.snapshot()["counters"].get("fleet.rounds") == 2
+    assert isinstance(rt2.fleet.events, (RingLog, list))
+
+
+# ---------------------------------------------------------------------------
+# report: golden render of a committed 2-island trace
+# ---------------------------------------------------------------------------
+
+
+def _fixture_records():
+    recs, damaged = TR.read_trace(DATA / "obs_trace_2island.jsonl")
+    assert damaged == 0
+    return recs
+
+
+def test_report_golden():
+    """Rendering is deterministic for a given trace file: the committed
+    2-island faulted run (straggler ejection, migration, island kill)
+    renders byte-identically to its golden report."""
+    txt = report.render(_fixture_records(), 0, "obs_trace_2island.jsonl")
+    golden = (DATA / "obs_report_2island.txt").read_text()
+    assert txt == golden
+
+
+def test_report_reconstructs_run_structure():
+    recs = _fixture_records()
+    tl = report.island_timelines(recs)
+    assert set(tl) == {0, 1}
+    assert len(tl[0]) == 4                        # island 0 ran every round
+    assert any(g["error"] == "IslandKilled" for g in tl[1])
+    led = report.ledger(recs)
+    assert [e["name"] for e in led] == ["fleet.straggler_ejected",
+                                       "fleet.migration", "fleet.killed"]
+    hv = report.hypervolume_progress(recs)
+    assert hv and all(h["hv_proxy"] >= 0 for h in hv)
+    # within one island the hv proxy never decreases on this fixture
+    by_island = {}
+    for h in hv:
+        prev = by_island.get(h["island"])
+        assert prev is None or h["hv_proxy"] >= prev - 1e-12
+        by_island[h["island"]] = h["hv_proxy"]
+    rounds = [c for c in report.cache_curve(recs) if "round" in c]
+    assert [c["round"] for c in rounds] == [0, 1, 2, 3]
+    assert all(0.0 <= c["hit_rate"] <= 1.0 for c in rounds)
+
+
+def test_report_cli_and_csv(tmp_path, capsys):
+    prefix = tmp_path / "run"
+    rc = report.main([str(DATA / "obs_trace_2island.jsonl"),
+                      "--csv", str(prefix)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "wall-clock by span" in out and "fault/quarantine ledger" in out
+    for section in ("spans", "generations", "cache", "ledger"):
+        f = Path(f"{prefix}.{section}.csv")
+        assert f.exists() and f.read_text().strip()
+
+
+def test_hv_2d_exact():
+    # staircase of two non-dominated points against ref (3,3):
+    # (1,2) contributes 2x1, (2,1) adds 1x1 -> 3
+    assert report._hv_2d([(1, 2), (2, 1)], (3, 3)) == pytest.approx(3.0)
+    # a dominated point adds nothing
+    assert report._hv_2d([(1, 2), (2, 1), (2.5, 2.5)],
+                         (3, 3)) == pytest.approx(3.0)
+    # points outside the ref are ignored
+    assert report._hv_2d([(4, 0.5)], (3, 3)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# traced searches stay bit-identical to untraced ones
+# ---------------------------------------------------------------------------
+
+
+def test_tracing_does_not_perturb_search(tmp_path):
+    with _tracing_off():
+        base = SearchRuntime(_cfg(), evaluate=_synthetic).run()
+    with TR.capture(tmp_path / "t.jsonl"):
+        traced = SearchRuntime(_cfg(), evaluate=_synthetic).run()
+    assert [s.to_json() for s in traced.front_specs] == \
+        [s.to_json() for s in base.front_specs]

@@ -21,6 +21,13 @@ STATIC-ARGNAMES HYGIENE (``static-argnames``) — every name listed in
   and a parameter with a mutable-literal default (list/dict/set —
   unhashable) must not be declared static.
 
+OBSERVABILITY BOUNDARY (``obs-in-jit``) — `repro.obs` spans/events/metrics
+  are host-side: they take wall-clock timestamps and append to process
+  state. Inside a jit-traced body they would run once at trace time and
+  then never again (a span would "time" the trace, not the computation).
+  Telemetry must wrap the *dispatch* of a jit'd function, never live
+  inside it.
+
 Usage::
 
     python tools/jaxlint.py src/          # exit 1 on findings
@@ -153,6 +160,36 @@ def _numpy_aliases(tree: ast.Module) -> Set[str]:
     return out
 
 
+def _obs_aliases(tree: ast.Module) -> tuple:
+    """(module aliases, function aliases) the file binds to `repro.obs`.
+    Module aliases cover ``from repro.obs import trace as TR`` /
+    ``import repro.obs``; function aliases cover
+    ``from repro.obs import span`` / ``from repro.obs.trace import event``."""
+    mods: Set[str] = set()
+    funcs: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for al in node.names:
+                if al.name == "repro.obs" or al.name.startswith("repro.obs."):
+                    mods.add((al.asname or al.name).split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == "repro.obs" or mod.startswith("repro.obs."):
+                for al in node.names:
+                    bound = al.asname or al.name
+                    # submodule import (trace/metrics/...) vs function import
+                    if mod == "repro.obs" and al.name in (
+                            "trace", "metrics", "ring", "report"):
+                        mods.add(bound)
+                    else:
+                        funcs.add(bound)
+            elif mod == "repro":
+                for al in node.names:
+                    if al.name == "obs":
+                        mods.add(al.asname or al.name)
+    return mods, funcs
+
+
 def _check_int_domain(path: str, tree: ast.Module) -> List[Finding]:
     out: List[Finding] = []
     for node in ast.walk(tree):
@@ -180,9 +217,12 @@ def _check_int_domain(path: str, tree: ast.Module) -> List[Finding]:
 
 
 def _check_jit_body(path: str, fn: ast.FunctionDef, static: Set[str],
-                    np_aliases: Set[str]) -> List[Finding]:
+                    np_aliases: Set[str],
+                    obs_aliases: tuple = (frozenset(), frozenset()),
+                    ) -> List[Finding]:
     out: List[Finding] = []
     tracer_params = set(_param_names(fn)) - static
+    obs_mods, obs_funcs = obs_aliases
 
     # static_argnames hygiene
     missing = static - set(_param_names(fn))
@@ -217,6 +257,14 @@ def _check_jit_body(path: str, fn: ast.FunctionDef, static: Set[str],
                     path, node.lineno, "numpy-in-jit",
                     f"numpy call '{dotted}' inside jit'd {fn.name}() — "
                     "numpy materializes tracers on host; use jnp"))
+            elif ((root in obs_mods and "." in dotted)
+                  or dotted in obs_funcs
+                  or dotted.startswith("repro.obs.")):
+                out.append(Finding(
+                    path, node.lineno, "obs-in-jit",
+                    f"obs call '{dotted}' inside jit'd {fn.name}() — "
+                    "spans/events/metrics are host-side and would fire at "
+                    "trace time only; wrap the dispatch instead"))
     return out
 
 
@@ -235,12 +283,13 @@ def lint_file(path: Path, *, rel: Optional[str] = None) -> List[Finding]:
         out.extend(_check_int_domain(str(path), tree))
 
     np_aliases = _numpy_aliases(tree)
+    obs_aliases = _obs_aliases(tree)
     for node in ast.walk(tree):
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
             static = _jit_decoration(node)
             if static is not None:
                 out.extend(_check_jit_body(str(path), node, static,
-                                           np_aliases))
+                                           np_aliases, obs_aliases))
     return out
 
 
