@@ -9,7 +9,9 @@ bespoke netlists and measured:
   evaluator over the test set, against the dense float forward pass of the
   same weights (the gap is the price of gate-level exactness — the dense
   forward is one matmul chain, the netlist is thousands of scattered
-  integer ops);
+  integer ops) and against the packed population engine
+  (`repro.kernels.netlist_sim`, here at P=1 — the executable a whole GA
+  population shares);
 * **verify**    — bit-exactness vs `minimize.integer_forward` and the
   structural-vs-analytic cost cross-validation, asserted on every row;
 * **delay**     — critical-path length in adder stages and the implied
@@ -28,6 +30,7 @@ from repro import circuit
 from repro.configs.printed_mlp import PRINTED_MLPS
 from repro.core import minimize as MZ
 from repro.core.compression_spec import ModelMin
+from repro.kernels import netlist_sim as NS
 from repro.nn import mlp as M
 
 
@@ -59,6 +62,16 @@ def _bench_point(cfg, spec: ModelMin, *, seed: int = 0) -> Dict:
         sim.run(xq)
     sim_ips = reps * len(xq) / (time.perf_counter() - t0)
 
+    # packed population engine at P=1 (one shape-bucketed executable)
+    pop = NS.pack_population([net])
+    xq64 = np.asarray(xq, np.int64)
+    packed = NS.simulate_population(pop, xq64)           # warm-up + compile
+    exact &= np.array_equal(packed["argmax"][0], out["argmax"])
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        NS.simulate_population(pop, xq64)
+    pop_ips = reps * len(xq) / (time.perf_counter() - t0)
+
     fwd = jax.jit(M.mlp_forward)
     pfloat = {"layers": tuple(
         {"w": jnp.asarray(w), "b": jnp.asarray(b)}
@@ -74,7 +87,7 @@ def _bench_point(cfg, spec: ModelMin, *, seed: int = 0) -> Dict:
     return {
         "dataset": cfg.name, "spec": spec.to_json(), "nodes": len(net),
         "compile_ms": compile_ms, "sim_inf_per_s": sim_ips,
-        "dense_inf_per_s": dense_ips,
+        "pop_inf_per_s": pop_ips, "dense_inf_per_s": dense_ips,
         "slowdown": dense_ips / max(sim_ips, 1e-9),
         "critical_path_levels": sc.critical_path_levels,
         "delay_ms": sc.delay_ms, "max_hz": sc.max_hz,
@@ -100,7 +113,7 @@ def main(fast: bool = False):
     rows = run(["seeds", "whitewine"] if fast else None)
     print("circuit_bench (bespoke netlist: compile / simulate / verify / "
           "delay)")
-    print("dataset,bits,nodes,compile_ms,sim_inf_s,dense_inf_s,"
+    print("dataset,bits,nodes,compile_ms,sim_inf_s,pop_inf_s,dense_inf_s,"
           "cp_levels,delay_ms,max_hz,bit_exact,crossval_ok")
     ok = True
     for r in rows:
@@ -111,7 +124,8 @@ def main(fast: bool = False):
                + (f"/k{spec.layers[0].clusters}" if spec.layers[0].clusters
                   else ""))
         print(f"{r['dataset']},{tag},{r['nodes']},{r['compile_ms']:.1f},"
-              f"{r['sim_inf_per_s']:.0f},{r['dense_inf_per_s']:.0f},"
+              f"{r['sim_inf_per_s']:.0f},{r['pop_inf_per_s']:.0f},"
+              f"{r['dense_inf_per_s']:.0f},"
               f"{r['critical_path_levels']},{r['delay_ms']:.0f},"
               f"{r['max_hz']:.1f},{r['bit_exact']},{r['crossval_ok']}")
         ok &= r["bit_exact"] and r["crossval_ok"]

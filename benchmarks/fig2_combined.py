@@ -25,10 +25,12 @@ from repro.core.pareto import gain_at_loss, pareto_front
 
 def run(dataset: str = "whitewine", *, population=14, generations=7,
         epochs=90, seed=0, cache_dir: Optional[str] = None,
-        netlist: bool = False, approx: bool = False) -> Dict:
-    """``netlist=True`` scores accuracy on the bit-exact simulation of each
-    candidate's compiled circuit (`repro.circuit`) instead of the float
-    emulation of the bespoke arithmetic. ``approx=True`` additionally lets
+        netlist: bool = True, approx: bool = False) -> Dict:
+    """Accuracy is scored by default on the bit-exact simulation of each
+    candidate's compiled circuit (`repro.circuit`, batched for the whole
+    population through `repro.kernels.netlist_sim`); ``netlist=False``
+    opts out to the float emulation of the bespoke arithmetic.
+    ``approx=True`` additionally lets
     the GA search the circuit-approximation genes (`repro.approx`:
     truncated-CSD coefficients, accumulator LSB truncation) and forces
     netlist-exact accuracy so exact and approximated candidates compete on

@@ -8,6 +8,7 @@ benches. Prints ``name,us_per_call,derived`` CSV summaries at the end.
   roofline_table  — §Roofline across all dry-run cells
   ga_bench        — GA hot path: serial vs batched population evaluation
   circuit_bench   — bespoke netlist compile / bit-exact sim / delay
+  netlist_bench   — netlist-exact vs analytic GA generation (<=2x gate)
   approx_bench    — budgeted circuit approximation + approximation-GA
   search_bench    — island runtime: throughput / checkpoint / resume cost
 
@@ -27,7 +28,7 @@ from typing import Dict
 
 from benchmarks import approx_bench, area_table, circuit_bench, \
     dryrun_memory_table, fig1_standalone, fig2_combined, ga_bench, \
-    kernel_bench, roofline_table, search_bench
+    kernel_bench, netlist_bench, roofline_table, search_bench
 
 BENCHES = [
     ("area_table", area_table.main),
@@ -38,6 +39,7 @@ BENCHES = [
     ("dryrun_memory_table", dryrun_memory_table.main),
     ("ga_bench", ga_bench.main),
     ("circuit_bench", circuit_bench.main),
+    ("netlist_bench", netlist_bench.main),
     ("approx_bench", approx_bench.main),
     ("search_bench", search_bench.main),
 ]

@@ -5,10 +5,18 @@ the host: nodes are grouped into topological levels and, within each level,
 by opcode. The resulting plan is a short list of gather -> elementwise-op ->
 scatter steps over one flat value buffer; the evaluator is a single jitted
 function, ``vmap``-ed over the input batch. Every intermediate is an exact
-machine integer — int32 when the netlist's derived max width fits, int64
-(under a local ``enable_x64`` scope) otherwise — so the simulation
-reproduces `minimize.integer_forward` bit-for-bit; there is no float
-anywhere in the datapath.
+machine integer — int32 when the verifier's per-node width bounds say every
+datapath word fits a 32-bit lane (`repro.verify.netlist.fits_int32`; the
+bound is inclusive at width 32, i.e. exactly the int32 range), int64 (under
+a local ``enable_x64`` scope) otherwise — so the simulation reproduces
+`minimize.integer_forward` bit-for-bit; there is no float anywhere in the
+datapath.
+
+For *population* throughput (the GA's netlist-exact objective) use
+`repro.kernels.netlist_sim`: this module rebuilds a jitted executable per
+netlist, which is exactly the per-candidate compile cost the packed
+population engine exists to amortize. `netlist_accuracy` below already
+routes through it.
 """
 from __future__ import annotations
 
@@ -127,8 +135,13 @@ class Simulator:
     """
 
     def __init__(self, net: ir.Netlist):
+        # lazy: repro.verify imports repro.circuit for the IR types
+        from repro.verify.netlist import fits_int32
         self.plan = build_plan(net)
-        self._x64 = self.plan.max_width > 31
+        # per-node width bounds, inclusive at 32: a width-32 word is
+        # exactly the int32 range, and the old whole-net `max_width > 31`
+        # check promoted such nets to 64-bit lanes they never needed
+        self._x64 = not fits_int32(net)
         dtype = jnp.int64 if self._x64 else jnp.int32
 
         def batch(x):                 # x: (B, n_inputs)
@@ -167,8 +180,17 @@ def simulate(net: ir.Netlist, x_int: np.ndarray) -> Dict[str, np.ndarray]:
 def netlist_accuracy(net: ir.Netlist, c, x: np.ndarray,
                      y: np.ndarray) -> float:
     """Netlist-exact test accuracy: ADC-quantize features with the QAT
-    compile's rounding, evaluate the printed datapath, compare argmax."""
+    compile's rounding, evaluate the printed datapath, compare argmax.
+
+    Routed through the packed population engine
+    (`repro.kernels.netlist_sim`) with P=1: its executables specialize on
+    bucketed shapes shared across a dataset's candidates, so repeated
+    serial scoring (the approx budget search, `evaluate_spec`) stops
+    paying a per-netlist XLA trace+compile. Bit-exact vs `Simulator.run`
+    by the kernel's tested contract."""
     from repro.core import minimize as MZ
+    from repro.kernels.netlist_sim import pack_population, population_accuracy
     xq = MZ.quantize_inputs(c, x)
-    out = Simulator(net).run(xq)
-    return float(np.mean(out["argmax"] == np.asarray(y)))
+    acc = population_accuracy(pack_population([net]), np.asarray(xq),
+                              np.asarray(y))
+    return float(acc[0])

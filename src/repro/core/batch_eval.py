@@ -425,18 +425,44 @@ class EvalCache:
 # population evaluation
 # ---------------------------------------------------------------------------
 
+# Per-spec packed node tables for the population netlist-sim engine, keyed
+# alongside the EvalCache keyspace (EvalCache.key(..., netlist=True) +
+# "|pack"): a netlist is a deterministic function of (dataset, seed,
+# epochs, spec) in-process, so a GA revisiting a genome whose EvalResult
+# was invalidated (or uncached) never re-lays-out its node tables.
+# Process-local, FIFO-capped — entries are a few dense KB each.
+_PACK_CACHE: Dict[str, object] = {}
+_PACK_CACHE_CAP = 2048
+
+
+def _packed_netlist_for(key: Optional[str], net, NS):
+    if key is not None and key in _PACK_CACHE:
+        MT.counter("netlist_sim.pack_hits").inc()
+        return _PACK_CACHE[key]
+    packed = NS.pack_netlist(net)
+    if key is not None:
+        while len(_PACK_CACHE) >= _PACK_CACHE_CAP:
+            _PACK_CACHE.pop(next(iter(_PACK_CACHE)))
+        _PACK_CACHE[key] = packed
+    return packed
+
 
 def _compile_and_price(params_pop, specs, masks_serial, xte, yte, *,
-                       netlist: bool = False,
-                       quarantine: Optional[List[QuarantineRecord]] = None
+                       netlist: bool = True,
+                       quarantine: Optional[List[QuarantineRecord]] = None,
+                       pack_key: Optional[Callable[[ModelMin], str]] = None
                        ) -> List[MZ.EvalResult]:
     """Host-side bespoke compile per candidate + one vectorized pricing
     call for the whole population. Every candidate is additionally lowered
     to its bespoke netlist (`repro.circuit`) for the critical-path delay;
-    with ``netlist=True`` the accuracy objective is the netlist-exact
-    simulation of the printed datapath instead of the float emulation
-    (area/power stay on the analytic pricing, which the structural netlist
-    cost is tested to reproduce exactly).
+    with ``netlist=True`` (the default objective) the accuracy is the
+    netlist-exact simulation of the printed datapath instead of the float
+    emulation (area/power stay on the analytic pricing, which the
+    structural netlist cost is tested to reproduce exactly). All exact
+    netlist-mode candidates are scored in ONE packed-population launch
+    through `repro.kernels.netlist_sim` — per-candidate node tables are
+    cached under ``pack_key(spec)`` alongside the EvalCache keyspace, so a
+    GA revisiting genomes repacks nothing.
 
     Candidates carrying approximation genes (`ModelMin.has_approx`) are
     scored by `approx.evaluate_netlist` — the one shared policy with the
@@ -453,9 +479,11 @@ def _compile_and_price(params_pop, specs, masks_serial, xte, yte, *,
     """
     from repro import approx as AX               # lazy: approx imports us
     from repro import circuit as CIRC            # lazy: circuit imports us
+    from repro.kernels import netlist_sim as NS  # lazy: imports circuit
 
     full: Dict[int, MZ.EvalResult] = {}   # approx-scored or quarantined
     compiled: Dict[int, MZ.CompiledMLP] = {}
+    nets: Dict[int, object] = {}          # netlist-exact scoring, deferred
     accs: Dict[int, float] = {}
     delays: Dict[int, int] = {}
 
@@ -479,9 +507,15 @@ def _compile_and_price(params_pop, specs, masks_serial, xte, yte, *,
                             "NaN accuracy out of approximated-netlist "
                             "simulation (diverged QAT finetune?)")
                     full[p] = r
+                elif netlist:
+                    # accuracy deferred: every exact candidate joins ONE
+                    # packed-population simulation after this loop (an
+                    # integer argmax cannot come back NaN)
+                    compiled[p] = c
+                    nets[p] = net
+                    delays[p] = net.critical_path_levels()
                 else:
-                    acc = (CIRC.netlist_accuracy(net, c, xte, yte) if netlist
-                           else MZ.compiled_accuracy(c, xte, yte))
+                    acc = MZ.compiled_accuracy(c, xte, yte)
                     if math.isnan(float(acc)):
                         raise FloatingPointError(
                             "NaN accuracy out of compiled forward "
@@ -507,6 +541,55 @@ def _compile_and_price(params_pop, specs, masks_serial, xte, yte, *,
                 warnings.warn(f"spec quarantined ({rec.stage}: {rec.error}: "
                               f"{rec.message}); worst-case fitness assigned")
             full[p] = _worst_case_result(spec)
+
+    # one packed-population launch scores every deferred exact candidate;
+    # if the batch itself faults, fall back to per-candidate serial
+    # simulation under the same retry-once-then-quarantine contract so one
+    # poisoned netlist cannot take the generation's scores down with it
+    if nets:
+        todo_p = sorted(nets)
+        try:
+            packs = [_packed_netlist_for(
+                pack_key(specs[p]) if pack_key else None, nets[p], NS)
+                for p in todo_p]
+            xq = np.stack([np.asarray(
+                MZ.quantize_inputs(compiled[p], xte), np.int64)
+                for p in todo_p])
+            pop_acc = NS.population_accuracy(NS.pack_population(packs),
+                                             xq, yte)
+            for j, p in enumerate(todo_p):
+                accs[p] = float(pop_acc[j])
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except BaseException:
+            for p in todo_p:
+                err2: Optional[BaseException] = None
+                for _attempt in (1, 2):
+                    try:
+                        accs[p] = float(CIRC.netlist_accuracy(
+                            nets[p], compiled[p], xte, yte))
+                        err2 = None
+                        break
+                    except (KeyboardInterrupt, SystemExit):
+                        raise
+                    except BaseException as e:
+                        err2 = e
+                if err2 is not None:
+                    rec = QuarantineRecord(specs[p].to_json(), "score",
+                                           type(err2).__name__, str(err2),
+                                           attempts=2)
+                    MT.counter("eval.quarantine.score").inc()
+                    TR.event("eval.quarantine", stage="score",
+                             error=rec.error, message=rec.message,
+                             spec=rec.spec_json)
+                    if quarantine is not None:
+                        quarantine.append(rec)
+                    else:
+                        warnings.warn(
+                            f"spec quarantined (score: {rec.error}: "
+                            f"{rec.message}); worst-case fitness assigned")
+                    full[p] = _worst_case_result(specs[p])
+                    del compiled[p]
 
     # stack per-layer integer weights / codebooks and price the whole
     # population in one hw_model call (pad codebooks to the layer's max k).
@@ -553,17 +636,21 @@ def _compile_and_price(params_pop, specs, masks_serial, xte, yte, *,
 def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
                         epochs: int = 150, seed: int = 0,
                         cache: Optional[EvalCache] = None,
-                        netlist: bool = False,
+                        netlist: bool = True,
                         quarantine: Optional[List[QuarantineRecord]] = None
                         ) -> List[MZ.EvalResult]:
     """Evaluate a population of specs with ONE vmapped QAT finetune + ONE
     vectorized pricing pass. Order-preserving; duplicates and cache hits
     are evaluated once. Drop-in for `[evaluate_spec(cfg, s) for s in specs]`.
 
-    ``netlist=True`` switches the accuracy objective to the bit-exact
-    simulation of each candidate's compiled netlist (`repro.circuit`) —
-    the printed datapath itself, integer biases and all — cached under a
-    separate key space. Specs with approximation genes are always scored
+    The accuracy objective defaults to the bit-exact simulation of each
+    candidate's compiled netlist (`repro.circuit`) — the printed datapath
+    itself, integer biases and all — scored for the whole population in
+    one `repro.kernels.netlist_sim` launch and cached under a separate key
+    space (old analytic cache entries keep their exact byte keys).
+    ``netlist=False`` opts back out to the float emulation
+    (`minimize.compiled_accuracy`). Specs with approximation genes are
+    always scored
     on their simulated approximated netlist and priced structurally,
     whatever ``netlist`` says; they live in the netlist keyspace (their
     genes are part of the spec JSON, so they can never collide with an
@@ -633,11 +720,17 @@ def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
             trained = jax.tree_util.tree_map(
                 lambda a: np.asarray(a[:n_real]), trained)
         recs: List[QuarantineRecord] = []
+
+        def pack_key(s: ModelMin) -> str:
+            return EvalCache.key(cfg.name, seed, epochs, s,
+                                 netlist=True) + "|pack"
+
         with TR.span("eval.compile_price", dataset=cfg.name, n=n_real):
             priced = _compile_and_price(trained, todo,
                                         masks_serial[:n_real],
                                         xte, yte, netlist=netlist,
-                                        quarantine=recs)
+                                        quarantine=recs,
+                                        pack_key=pack_key)
         for r in priced:
             results[r.spec.to_json()] = r
             if cache is not None and \
@@ -666,7 +759,7 @@ def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
 def make_batch_evaluator(cfg: PrintedMLPConfig, *, epochs: int = 150,
                          seed: int = 0,
                          cache: Optional[EvalCache] = None,
-                         netlist: bool = False,
+                         netlist: bool = True,
                          include_delay: bool = False,
                          record: Optional[Dict[str, MZ.EvalResult]] = None,
                          quarantine: Optional[List[QuarantineRecord]]
@@ -674,8 +767,10 @@ def make_batch_evaluator(cfg: PrintedMLPConfig, *, epochs: int = 150,
     """GA adapter: List[ModelMin] -> List[(1 - accuracy, area_mm2[,
     delay_levels])]. Plug into `run_nsga2(..., batch_evaluate=...)`.
 
-    ``netlist=True`` makes the accuracy objective netlist-exact (the
-    simulated printed datapath); ``include_delay=True`` adds the compiled
+    The accuracy objective is netlist-exact by default (the simulated
+    printed datapath, batched through `repro.kernels.netlist_sim`);
+    ``netlist=False`` opts out to the analytic float emulation.
+    ``include_delay=True`` adds the compiled
     circuit's critical path as a third minimized objective. ``record``, if
     given, collects every EvalResult by spec json — callers (fig2, the
     example) read Pareto-front delay out of it without re-evaluating.

@@ -255,7 +255,13 @@ def make_masks(params0, spec: ModelMin):
 
 
 def evaluate_spec(cfg: PrintedMLPConfig, spec: ModelMin, *,
-                  epochs: int = 150, seed: int = 0) -> EvalResult:
+                  epochs: int = 150, seed: int = 0,
+                  netlist: bool = True) -> EvalResult:
+    """Serial single-spec evaluation, objective-identical to
+    `batch_eval.evaluate_population`: accuracy defaults to the bit-exact
+    simulation of the compiled netlist (the printed datapath); pass
+    ``netlist=False`` for the analytic float-emulation opt-out.
+    Area/power stay on the analytic pricing either way."""
     params0, (xtr, ytr, xte, yte) = pretrain(cfg, seed=seed)
     masks = make_masks(params0, spec)
     params = qat_finetune(params0, spec, masks, xtr, ytr, epochs=epochs)
@@ -267,7 +273,11 @@ def evaluate_spec(cfg: PrintedMLPConfig, spec: ModelMin, *,
         # scoring policy with the batched path (`approx.evaluate_netlist`)
         from repro import approx as AX
         return AX.evaluate_netlist(net, compiled, spec, xte, yte)
-    acc = compiled_accuracy(compiled, xte, yte)
+    if netlist:
+        from repro import circuit as CIRC
+        acc = CIRC.netlist_accuracy(net, compiled, xte, yte)
+    else:
+        acc = compiled_accuracy(compiled, xte, yte)
     cost = compiled_cost(compiled)
     return EvalResult(spec, acc, cost.area_mm2, cost.power_mw,
                       cost.n_multipliers,

@@ -1,0 +1,10 @@
+"""Population-batched netlist simulation (see ops.py for the engine map)."""
+from repro.kernels.netlist_sim.kernel import netlist_sim_pallas  # noqa: F401
+from repro.kernels.netlist_sim.ops import (population_accuracy,  # noqa: F401
+                                           simulate_population)
+from repro.kernels.netlist_sim.pack import (NOP,  # noqa: F401
+                                            PackedNetlist, PackedPopulation,
+                                            pack_netlist, pack_population,
+                                            unpack_netlist)
+from repro.kernels.netlist_sim.ref import \
+    simulate_population_ref  # noqa: F401

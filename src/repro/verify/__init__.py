@@ -27,7 +27,8 @@ from repro.verify.diagnostics import (ERROR, WARN, Diagnostic,  # noqa: F401
                                       VerificationError, errors,
                                       verify_enabled)
 from repro.verify.netlist import (SIM_WIDTH_BUDGET,  # noqa: F401
-                                  check_netlist, verify_netlist)
+                                  check_netlist, fits_int32, max_sim_width,
+                                  node_widths, verify_netlist)
 from repro.verify.spec import (check_specs, lint_spec,  # noqa: F401
                                lint_specs)
 from repro.verify.mutate import CATALOG, Mutation, apply_mutation  # noqa: F401

@@ -96,6 +96,29 @@ def _bits(lo: int, hi: int) -> int:
     return max(bits_hi, bits_lo)
 
 
+def node_widths(net: ir.Netlist) -> List[int]:
+    """Per-node minimal two's-complement widths of the datapath words,
+    re-derived from the stored intervals (the ARGMAX comparator emits a
+    class index, not a datapath word, so it is excluded — same population
+    as the 62-bit sim-budget check below)."""
+    return [_bits(n.lo, n.hi) for n in net.nodes if n.op != ir.Op.ARGMAX]
+
+
+def max_sim_width(net: ir.Netlist) -> int:
+    """Widest datapath word a simulator lane must hold for this net."""
+    ws = node_widths(net)
+    return max(ws) if ws else 1
+
+
+def fits_int32(net: ir.Netlist) -> bool:
+    """True when every datapath word fits an int32 lane. The bound is per
+    node and inclusive at 32: a width-32 two's-complement interval is
+    exactly [-2^31, 2^31 - 1], i.e. the int32 range — simulators used to
+    promote such nets to int64 off a ``> 31`` whole-net check and pay for
+    64-bit lanes they never needed."""
+    return max_sim_width(net) <= 32
+
+
 def _expected_interval(net: ir.Netlist, n: ir.Node):
     """Re-derive a node's value interval from its operands' stored
     intervals per the documented opcode semantics. Returns None when the

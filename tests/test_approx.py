@@ -310,7 +310,11 @@ def test_evaluate_population_approx_specs(tmp_path):
     ax = ModelMin.uniform(n, bits=4, sparsity=0.4, clusters=8,
                           csd_drop=1, lsb=2)
     cache = BE.EvalCache(tmp_path / "evals.json")
-    rs = BE.evaluate_population(cfg, [exact, ax], epochs=10, cache=cache)
+    # analytic opt-out: approx specs must STILL be forced onto the
+    # simulated netlist (exact and approximated candidates compete on the
+    # same datapath objective), while the exact twin takes the float path
+    rs = BE.evaluate_population(cfg, [exact, ax], epochs=10, cache=cache,
+                                netlist=False)
     # the approximated circuit must be strictly cheaper than its exact twin
     assert rs[1].area_mm2 < rs[0].area_mm2
     assert rs[1].delay_levels is not None
@@ -320,7 +324,8 @@ def test_evaluate_population_approx_specs(tmp_path):
     assert cache.get(cfg.name, 0, 10, exact, netlist=True) is None
     assert cache.get(cfg.name, 0, 10, exact) is not None
     # cached re-evaluation returns identical numbers
-    again = BE.evaluate_population(cfg, [exact, ax], epochs=10, cache=cache)
+    again = BE.evaluate_population(cfg, [exact, ax], epochs=10, cache=cache,
+                                   netlist=False)
     assert again[1].area_mm2 == rs[1].area_mm2
     assert again[1].accuracy == rs[1].accuracy
 

@@ -245,15 +245,16 @@ def test_evaluate_spec_reports_netlist_delay():
 
 
 def test_population_netlist_mode_prices_identically():
-    """netlist=True swaps only the accuracy objective for the bit-exact
-    simulation; area/power/multipliers/delay are unchanged (the structural
-    cost is the analytic cost — that's the cross-validation invariant)."""
+    """The netlist-exact objective (the default) swaps only the accuracy
+    for the bit-exact simulation vs the analytic opt-out (netlist=False);
+    area/power/multipliers/delay are unchanged (the structural cost is the
+    analytic cost — that's the cross-validation invariant)."""
     from repro.core import batch_eval as BE
     cfg = PRINTED_MLPS["seeds"]
     n_layers = len(cfg.layer_dims) - 1
     specs = [ModelMin.uniform(n_layers, bits=8),
              ModelMin.uniform(n_layers, bits=3, sparsity=0.3, clusters=4)]
-    ra = BE.evaluate_population(cfg, specs, epochs=10)
+    ra = BE.evaluate_population(cfg, specs, epochs=10, netlist=False)
     rn = BE.evaluate_population(cfg, specs, epochs=10, netlist=True)
     for a, b in zip(ra, rn):
         assert a.area_mm2 == b.area_mm2

@@ -252,8 +252,10 @@ def test_nan_accuracy_quarantined(monkeypatch):
     monkeypatch.setattr(MZ, "compiled_accuracy",
                         lambda c, x, y: float("nan"))
     q = []
+    # the NaN guard belongs to the analytic scorer (an integer-argmax
+    # netlist accuracy cannot come back NaN), so opt out of the default
     rs = BE.evaluate_population(cfg, [QSPECS[0]], epochs=EPOCHS, seed=SEED,
-                                quarantine=q)
+                                quarantine=q, netlist=False)
     assert rs[0].accuracy == 0.0
     assert len(q) == 1
     assert q[0].stage == "score"
@@ -268,9 +270,11 @@ def test_quarantined_specs_never_cached(tmp_path):
     with inject_eval_faults([EvalFault(spec_json=bad, fail_attempts=2)]):
         BE.evaluate_population(cfg, QSPECS, epochs=EPOCHS, seed=SEED,
                                cache=cache, quarantine=[])
-    # healthy specs cached, the quarantined one left for a fixed toolchain
-    assert cache.get(cfg.name, SEED, EPOCHS, QSPECS[0]) is not None
-    assert cache.get(cfg.name, SEED, EPOCHS, QSPECS[1]) is None
+    # healthy specs cached (under the default netlist-exact keyspace),
+    # the quarantined one left for a fixed toolchain
+    assert cache.get(cfg.name, SEED, EPOCHS, QSPECS[0],
+                     netlist=True) is not None
+    assert cache.get(cfg.name, SEED, EPOCHS, QSPECS[1], netlist=True) is None
 
 
 def test_quarantine_surfaces_in_ga_result():
