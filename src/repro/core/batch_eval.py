@@ -32,6 +32,7 @@ import math
 import os
 import tempfile
 import warnings
+from collections import OrderedDict
 from pathlib import Path
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -44,6 +45,7 @@ from repro.core import hw_model as HW
 from repro.core import minimize as MZ
 from repro.core.compression_spec import ModelMin
 from repro.obs import metrics as MT
+from repro.obs import prof as PF
 from repro.obs import trace as TR
 
 # Padded k-means slot count: must cover every cluster count the GA can emit
@@ -430,19 +432,24 @@ class EvalCache:
 # "|pack"): a netlist is a deterministic function of (dataset, seed,
 # epochs, spec) in-process, so a GA revisiting a genome whose EvalResult
 # was invalidated (or uncached) never re-lays-out its node tables.
-# Process-local, FIFO-capped — entries are a few dense KB each.
-_PACK_CACHE: Dict[str, object] = {}
+# Process-local, LRU-capped (mirroring EvalCache's max_entries): a
+# service-style run cycling through many datasets/specs keeps its working
+# set and evicts the least-recently-hit tables — entries are a few dense
+# KB each, and `netlist_sim.pack_evictions` counts the churn.
+_PACK_CACHE: "OrderedDict[str, object]" = OrderedDict()
 _PACK_CACHE_CAP = 2048
 
 
 def _packed_netlist_for(key: Optional[str], net, NS):
     if key is not None and key in _PACK_CACHE:
         MT.counter("netlist_sim.pack_hits").inc()
+        _PACK_CACHE.move_to_end(key)
         return _PACK_CACHE[key]
     packed = NS.pack_netlist(net)
     if key is not None:
         while len(_PACK_CACHE) >= _PACK_CACHE_CAP:
-            _PACK_CACHE.pop(next(iter(_PACK_CACHE)))
+            _PACK_CACHE.popitem(last=False)
+            MT.counter("netlist_sim.pack_evictions").inc()
         _PACK_CACHE[key] = packed
     return packed
 
@@ -707,18 +714,35 @@ def evaluate_population(cfg: PrintedMLPConfig, specs: Sequence[ModelMin], *,
         bits, ks = stack_specs(padded)
         stacked, masks_serial = stack_masks(params0, padded)
         masks = tuple(jnp.asarray(m) for m in stacked)
-        # the span wraps DISPATCH of the population jit (never runs inside
-        # traced code); the first call per (dataset, bucket, epochs) pays
-        # XLA compilation and is tagged so reports split compile_ms out
-        with TR.span("eval.finetune", dataset=cfg.name, bucket=bucket,
-                     n=n_real,
-                     first=TR.first_call(("finetune", cfg.name, bucket,
-                                          epochs))):
-            trained = _population_finetune(
-                params0, jnp.asarray(bits), jnp.asarray(ks), masks,
-                jnp.asarray(xtr), jnp.asarray(ytr), epochs=epochs, lr=2e-3)
-            trained = jax.tree_util.tree_map(
-                lambda a: np.asarray(a[:n_real]), trained)
+        # population-bucket padding accounting (same convention as
+        # netlist_sim's lane padding): real specs vs padded bucket slots
+        MT.counter("eval.pad.specs_real").inc(n_real)
+        MT.counter("eval.pad.specs_total").inc(bucket)
+        MT.histogram("eval.bucket_util_hist").observe(n_real / bucket)
+        bits_j, ks_j = jnp.asarray(bits), jnp.asarray(ks)
+        xtr_j, ytr_j = jnp.asarray(xtr), jnp.asarray(ytr)
+        args = (params0, bits_j, ks_j, masks, xtr_j, ytr_j)
+        kw = dict(epochs=epochs, lr=2e-3)
+        # the dispatch wrapper times DISPATCH of the population jit (never
+        # runs inside traced code); the first call per (dataset, bucket,
+        # epochs) pays XLA compilation, is tagged `first` so reports split
+        # compile_ms out, and has its cost/memory analysis captured into
+        # the executable registry
+        if not TR.active():
+            trained = _population_finetune(*args, **kw)
+        else:
+            TR.event("eval.padding", dataset=cfg.name, specs_real=n_real,
+                     specs_total=bucket)
+            key = ("finetune", cfg.name, bucket, epochs,
+                   tuple(cfg.layer_dims))
+            with PF.dispatch("eval.finetune", key,
+                             lower=lambda: _population_finetune.lower(
+                                 *args, **kw),
+                             dataset=cfg.name, bucket=bucket, n=n_real):
+                trained = _population_finetune(*args, **kw)
+                jax.block_until_ready(trained)
+        trained = jax.tree_util.tree_map(
+            lambda a: np.asarray(a[:n_real]), trained)
         recs: List[QuarantineRecord] = []
 
         def pack_key(s: ModelMin) -> str:

@@ -32,7 +32,12 @@ import jax.numpy as jnp
 
 def _kmeans_1d(x: jnp.ndarray, k: int, iters: int = 25):
     """x: (N,) fp32. Returns (centroids (k,), assign (N,) int32).
-    Deterministic: quantile init + Lloyd iterations (jit-friendly)."""
+    Deterministic: quantile init + Lloyd iterations (jit-friendly).
+
+    Deliberately NOT jitted: this is the eager numerical reference that
+    `batch_eval._padded_kmeans_1d` is tested bit-exact against (a fused
+    standalone executable rounds differently by ~1 ulp). The hot eager
+    entry is `cluster_per_input`, which owns the jit boundary."""
     qs = (jnp.arange(k, dtype=jnp.float32) + 0.5) / k
     cent = jnp.quantile(x, qs)
 
@@ -57,10 +62,18 @@ def kmeans_layer(w: jnp.ndarray, k: int, iters: int = 25):
     return cent, a.reshape(w.shape)
 
 
+@partial(jax.jit, static_argnames=("k", "iters"))
 def cluster_per_input(w: jnp.ndarray, k: int, iters: int = 25):
     """Paper's multiplier-sharing form: k-means per input row.
-    w: (d_in, d_out). Returns (codebooks (d_in, k), idx (d_in, d_out))."""
-    f = jax.vmap(partial(_kmeans_1d, k=k, iters=iters))
+    w: (d_in, d_out). Returns (codebooks (d_in, k), idx (d_in, d_out)).
+
+    Jitted with static (k, iters): called eagerly per candidate layer from
+    ``minimize.compile_bespoke``, an un-jitted entry would retrace the Lloyd
+    ``lax.scan`` on EVERY call and re-enter the backend compiler each warm
+    GA generation (found by the executable observatory — the netlist_bench
+    zero-compile gate attributed ~14 backend compiles per generation to
+    this site). Static k/iters keep one executable per (shape, k)."""
+    f = jax.vmap(lambda row: _kmeans_1d(row, k=k, iters=iters))
     cent, a = f(w.astype(jnp.float32))
     return cent, a
 

@@ -8,6 +8,7 @@ import jax
 
 from repro.kernels.block_sparse_matmul.kernel import block_sparse_matmul_pallas
 from repro.kernels.block_sparse_matmul.ref import block_sparse_matmul_ref
+from repro.obs import prof as PF
 from repro.obs import trace as TR
 
 
@@ -29,8 +30,11 @@ def block_sparse_matmul(x, w, block_mask, *, block_m=128, block_n=128,
                                         block_n=block_n, block_k=block_k,
                                         interpret=interpret)
     key = ("block_sparse_matmul", x.shape, w.shape, block_m, block_n, block_k)
-    with TR.span("kernels.block_sparse_matmul", m=x.shape[0], k=x.shape[1],
-                 n=w.shape[1], first=TR.first_call(key)):
+    with PF.dispatch("kernels.block_sparse_matmul", key,
+                     lower=lambda: _block_sparse_matmul_jit.lower(
+                         x, w, block_mask, block_m=block_m, block_n=block_n,
+                         block_k=block_k, interpret=interpret),
+                     m=x.shape[0], k=x.shape[1], n=w.shape[1]):
         y = _block_sparse_matmul_jit(x, w, block_mask, block_m=block_m,
                                      block_n=block_n, block_k=block_k,
                                      interpret=interpret)

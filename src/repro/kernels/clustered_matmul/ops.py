@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.kernels.clustered_matmul.kernel import clustered_matmul_pallas
 from repro.kernels.clustered_matmul.ref import clustered_matmul_ref
+from repro.obs import prof as PF
 from repro.obs import trace as TR
 
 
@@ -43,8 +44,11 @@ def clustered_matmul(x, idx, codebook, *, block_m=128, block_n=128,
                                      block_n=block_n, block_k=block_k,
                                      interpret=interpret)
     key = ("clustered_matmul", x.shape, idx.shape, block_m, block_n, block_k)
-    with TR.span("kernels.clustered_matmul", m=x.shape[0], k=x.shape[1],
-                 n=idx.shape[1], first=TR.first_call(key)):
+    with PF.dispatch("kernels.clustered_matmul", key,
+                     lower=lambda: _clustered_matmul_jit.lower(
+                         x, idx, codebook, block_m=block_m, block_n=block_n,
+                         block_k=block_k, interpret=interpret),
+                     m=x.shape[0], k=x.shape[1], n=idx.shape[1]):
         y = _clustered_matmul_jit(x, idx, codebook, block_m=block_m,
                                   block_n=block_n, block_k=block_k,
                                   interpret=interpret)

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.obs import prof as PF
 from repro.obs import trace as TR
 
 
@@ -55,8 +56,13 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
                                     block_k=block_k, interpret=interpret)
     key = ("flash_attention", q.shape, k.shape, causal, window, softcap,
            block_q, block_k)
-    with TR.span("kernels.flash_attention", b=q.shape[0], t=q.shape[1],
-                 h=q.shape[2], s=k.shape[1], first=TR.first_call(key)):
+    with PF.dispatch("kernels.flash_attention", key,
+                     lower=lambda: _flash_attention_jit.lower(
+                         q, k, v, causal=causal, window=window,
+                         softcap=softcap, block_q=block_q, block_k=block_k,
+                         interpret=interpret),
+                     b=q.shape[0], t=q.shape[1], h=q.shape[2],
+                     s=k.shape[1]):
         o = _flash_attention_jit(q, k, v, causal=causal, window=window,
                                  softcap=softcap, block_q=block_q,
                                  block_k=block_k, interpret=interpret)

@@ -32,7 +32,8 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Dict, Optional
+import functools
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +47,7 @@ from repro.kernels.netlist_sim.pack import (NOP, PackedPopulation,
 from repro.kernels.netlist_sim.ref import (_normalize_x,
                                            simulate_population_ref)
 from repro.obs import metrics as MT
+from repro.obs import prof as PF
 from repro.obs import trace as TR
 
 _CONST = int(ir.Op.CONST)
@@ -184,14 +186,27 @@ def _pad_candidates(pop: PackedPopulation, x: np.ndarray, p_pad: int):
     return pop2, tile2(x)
 
 
+def _real_ops(pop: PackedPopulation) -> int:
+    """Computational (wave-scheduled) ops over the real candidates."""
+    n = pop.n_nodes.astype(np.int64)
+    valid = np.arange(pop.op.shape[1])[None, :] < n[:, None]
+    return int((valid & (pop.op >= _SHL) & (pop.op != _ARGMAX)).sum())
+
+
 def _run_engine(pop: PackedPopulation, x: np.ndarray, engine: str,
                 window: int, block_b: int,
-                interpret: Optional[bool]) -> np.ndarray:
-    """-> amx (P, B, C) int64 for the real (unpadded) candidates."""
+                interpret: Optional[bool]) -> Tuple[np.ndarray, Dict]:
+    """-> (amx, stats): amx (P, B, C) int64 for the real (unpadded)
+    candidates; stats the launch's padding/executable accounting —
+    ``key`` is the *exact* static-shape specialization tuple of the jit
+    this launch dispatches (the executable-observatory identity), and
+    the ``*_used``/``*_total`` pairs measure real work vs padded work
+    (NOP wave lanes, repeated candidates, repeated batch rows)."""
     P, B = x.shape[0], x.shape[1]
     fits32 = pop.max_width <= 32
     scope = contextlib.nullcontext() if fits32 else enable_x64()
     dtype = jnp.int32 if fits32 else jnp.int64
+    lane = "int32" if fits32 else "int64"
 
     if engine == "pallas":
         if not fits32:
@@ -202,11 +217,42 @@ def _run_engine(pop: PackedPopulation, x: np.ndarray, engine: str,
             interpret = jax.default_backend() != "tpu"
 
     if engine == "levels":
-        ppad, xpad = _pad_candidates(pop, x, _bucket(P))
+        p_pad = _bucket(P)
+        ppad, xpad = _pad_candidates(pop, x, p_pad)
         sched = _global_schedule(ppad, window)
         bt = min(_bucket(B), block_b)
+        n_tiles = -(-B // bt)
+        nw, W = sched.OP.shape
+        n_buf = sched.vals0.size
+        n_in, C = sched.inp_cols.shape[1], sched.am_cols.shape[1]
+        stats = {
+            "engine": "levels",
+            "key": ("netlist_levels", nw, W, n_buf, p_pad, n_in, C, bt,
+                    lane),
+            "cand_real": P, "cand_total": p_pad,
+            # wave lanes actually carrying an op (incl. the repeated
+            # padding candidates) vs the bucketed wave grid
+            "lanes_used": int((sched.OP != NOP).sum()),
+            "lanes_total": nw * W,
+            "ops_real": _real_ops(pop),
+            "rows_real": B, "rows_total": n_tiles * bt,
+            "tiles": n_tiles,
+        }
+
+        def _lower():
+            tile = xc[0:bt]
+            pad = bt - tile.shape[0]
+            if pad:
+                tile = np.concatenate([tile, tile[-1:].repeat(pad, 0)])
+            with (contextlib.nullcontext() if fits32 else enable_x64()):
+                return _run_levels.lower(*args, vals0, inp_cols, am_cols,
+                                         jnp.asarray(tile.astype(dtype)))
+
         outs = []
-        with scope:
+        ctx = (PF.dispatch("kernels.netlist_sim.levels", stats["key"],
+                           lower=_lower, p=P, b=B, tiles=n_tiles)
+               if TR.active() else contextlib.nullcontext())
+        with ctx, scope:
             args = [jnp.asarray(a) for a in
                     (sched.OP, sched.AI, sched.BI, sched.SH, sched.OUT)]
             vals0 = jnp.asarray(sched.vals0.astype(dtype))
@@ -224,22 +270,47 @@ def _run_engine(pop: PackedPopulation, x: np.ndarray, engine: str,
                                   jnp.asarray(tile.astype(dtype)))
                 outs.append(np.asarray(amx[:bt - pad], np.int64))
         amx = np.concatenate(outs).transpose(1, 0, 2)     # (P_pad, B, C)
-        return amx[:P]
+        return amx[:P], stats
 
     if engine == "pallas":
         bt = min(_bucket(B), 256)
         bpad = -B % bt
         xp = (np.concatenate([x, x[:, -1:].repeat(bpad, 1)], axis=1)
               if bpad else x)
-        amx = netlist_sim_pallas(
-            jnp.asarray(pop.op), jnp.asarray(pop.arg_a),
-            jnp.asarray(pop.arg_b), jnp.asarray(pop.shift),
-            jnp.asarray(pop.val.astype(np.int32)),
-            jnp.asarray(pop.level_ptr), jnp.asarray(pop.input_pos),
-            jnp.asarray(pop.argmax_pos),
-            jnp.asarray(xp.astype(np.int32)),
-            block_b=bt, interpret=bool(interpret))
-        return np.asarray(amx, np.int64)[:, :B]
+        N, Lp1 = pop.op.shape[1], pop.level_ptr.shape[1]
+        n_in, C = pop.input_pos.shape[1], pop.argmax_pos.shape[1]
+        slots_used = int(pop.n_nodes.sum())
+        stats = {
+            "engine": "pallas",
+            "key": ("netlist_pallas", P, N, Lp1, n_in, C, B + bpad, bt,
+                    bool(interpret)),
+            "cand_real": P, "cand_total": P,
+            # dense (P, N) node tables vs the candidates' real node counts
+            "lanes_used": slots_used, "lanes_total": P * N,
+            "ops_real": _real_ops(pop),
+            "rows_real": B, "rows_total": B + bpad,
+            "tiles": (B + bpad) // bt,
+        }
+        tables = (jnp.asarray(pop.op), jnp.asarray(pop.arg_a),
+                  jnp.asarray(pop.arg_b), jnp.asarray(pop.shift),
+                  jnp.asarray(pop.val.astype(np.int32)),
+                  jnp.asarray(pop.level_ptr), jnp.asarray(pop.input_pos),
+                  jnp.asarray(pop.argmax_pos),
+                  jnp.asarray(xp.astype(np.int32)))
+
+        def _lower():
+            fn = jax.jit(functools.partial(netlist_sim_pallas, block_b=bt,
+                                           interpret=bool(interpret)))
+            return fn.lower(*tables)
+
+        ctx = (PF.dispatch("kernels.netlist_sim.pallas", stats["key"],
+                           lower=_lower, p=P, b=B, tiles=stats["tiles"])
+               if TR.active() else contextlib.nullcontext())
+        with ctx:
+            amx = netlist_sim_pallas(*tables, block_b=bt,
+                                     interpret=bool(interpret))
+            jax.block_until_ready(amx)
+        return np.asarray(amx, np.int64)[:, :B], stats
 
     raise ValueError(f"unknown engine {engine!r}")
 
@@ -271,15 +342,39 @@ def simulate_population(pop: PackedPopulation, x: np.ndarray, *,
     MT.counter("netlist_sim.launches").inc()
     MT.counter("netlist_sim.candidates").inc(P)
     if not TR.active():
-        amx = _run_engine(pop, x, engine, window, block_b, interpret)
+        amx, stats = _run_engine(pop, x, engine, window, block_b, interpret)
     else:
-        key = ("netlist_sim", engine, _bucket(P), pop.n_slots,
-               min(_bucket(B), block_b), pop.max_width <= 32)
         with TR.span("kernels.netlist_sim", engine=engine, p=P, b=B,
-                     slots=int(pop.n_nodes.sum()),
-                     first=TR.first_call(key)):
-            amx = _run_engine(pop, x, engine, window, block_b, interpret)
+                     slots=int(pop.n_nodes.sum())):
+            amx, stats = _run_engine(pop, x, engine, window, block_b,
+                                     interpret)
+    _account_padding(stats)
     return {"amx": amx, "argmax": np.argmax(amx, axis=-1).astype(np.int64)}
+
+
+def _account_padding(stats: Dict) -> None:
+    """Always-on packing-efficiency accounting for one launch. Counters
+    hold exact lane/row totals (deterministic functions of the evaluated
+    populations, so they keep the checkpoint bit-identity contract);
+    utilization ratios go to gauges/histograms; the full per-launch stats
+    ride the trace as a ``netlist_sim.padding`` event when tracing."""
+    lanes_u, lanes_t = stats["lanes_used"], stats["lanes_total"]
+    rows_r, rows_t = stats["rows_real"], stats["rows_total"]
+    MT.counter("netlist_sim.pad.lanes_used").inc(lanes_u)
+    MT.counter("netlist_sim.pad.lanes_total").inc(lanes_t)
+    MT.counter("netlist_sim.pad.rows_real").inc(rows_r)
+    MT.counter("netlist_sim.pad.rows_total").inc(rows_t)
+    MT.counter("netlist_sim.pad.cand_real").inc(stats["cand_real"])
+    MT.counter("netlist_sim.pad.cand_total").inc(stats["cand_total"])
+    lane_util = lanes_u / max(lanes_t, 1)
+    MT.gauge("netlist_sim.lane_util").set(lane_util)
+    MT.histogram("netlist_sim.lane_util_hist").observe(lane_util)
+    MT.histogram("netlist_sim.row_util_hist").observe(
+        rows_r / max(rows_t, 1))
+    if TR.active():
+        TR.event("netlist_sim.padding",
+                 **{k: (PF.key_str(v) if k == "key" else v)
+                    for k, v in stats.items()})
 
 
 def population_accuracy(pop: PackedPopulation, x: np.ndarray,

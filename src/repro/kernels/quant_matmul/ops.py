@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
 from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from repro.obs import prof as PF
 from repro.obs import trace as TR
 
 
@@ -44,8 +45,11 @@ def quant_matmul(x, w_q, scales, *, block_m=128, block_n=128, block_k=128,
                                  block_n=block_n, block_k=block_k,
                                  interpret=interpret)
     key = ("quant_matmul", x.shape, w_q.shape, block_m, block_n, block_k)
-    with TR.span("kernels.quant_matmul", m=x.shape[0], k=x.shape[1],
-                 n=w_q.shape[1], first=TR.first_call(key)):
+    with PF.dispatch("kernels.quant_matmul", key,
+                     lower=lambda: _quant_matmul_jit.lower(
+                         x, w_q, scales, block_m=block_m, block_n=block_n,
+                         block_k=block_k, interpret=interpret),
+                     m=x.shape[0], k=x.shape[1], n=w_q.shape[1]):
         y = _quant_matmul_jit(x, w_q, scales, block_m=block_m,
                               block_n=block_n, block_k=block_k,
                               interpret=interpret)

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.kernels.ssm_scan.kernel import ssm_scan_pallas
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.obs import prof as PF
 from repro.obs import trace as TR
 
 
@@ -40,8 +41,11 @@ def ssm_scan(u, dt, B_, C_, A, D, *, block_d=None, block_t=8,
         return _ssm_scan_jit(u, dt, B_, C_, A, D, block_d=block_d,
                              block_t=block_t, interpret=interpret)
     key = ("ssm_scan", u.shape, B_.shape, block_d, block_t)
-    with TR.span("kernels.ssm_scan", b=u.shape[0], t=u.shape[1],
-                 d=u.shape[2], first=TR.first_call(key)):
+    with PF.dispatch("kernels.ssm_scan", key,
+                     lower=lambda: _ssm_scan_jit.lower(
+                         u, dt, B_, C_, A, D, block_d=block_d,
+                         block_t=block_t, interpret=interpret),
+                     b=u.shape[0], t=u.shape[1], d=u.shape[2]):
         y = _ssm_scan_jit(u, dt, B_, C_, A, D, block_d=block_d,
                           block_t=block_t, interpret=interpret)
         jax.block_until_ready(y)

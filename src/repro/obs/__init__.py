@@ -8,18 +8,25 @@ Three pieces, all zero-cost when off (the ``REPRO_TRACE`` idiom, mirroring
 * `repro.obs.metrics` — the process-wide counter/gauge/histogram registry,
   snapshotted into every search checkpoint and restored bit-identically on
   resume;
+* `repro.obs.prof` / `repro.obs.xprof` — the executable observatory:
+  a process-wide registry of jit executables (cost/memory analysis on
+  first compile, compile-event accounting via ``jax.monitoring``,
+  per-key dispatch counts), snapshotted into every search checkpoint
+  like the metrics registry;
 * `repro.obs.report` — ``python -m repro.obs.report trace.jsonl`` renders
   wall-clock breakdowns, per-island timelines, Pareto progress, cache-hit
-  curves and the fault/quarantine ledger (plus CSVs).
+  curves, the executables/padding-waste sections and the fault/quarantine
+  ledger (plus CSVs).
 
 `repro.obs.ring.RingLog` is the bounded in-memory event log the search
 runtime uses so long runs spill their full event stream to the trace
 instead of growing lists without bound.
 """
-from repro.obs import metrics
+from repro.obs import metrics, prof, xprof
 from repro.obs.ring import RingLog
 from repro.obs.trace import (active, capture, event, first_call, read_trace,
                              span, start, stop)
 
 __all__ = ["RingLog", "active", "capture", "event", "first_call",
-           "metrics", "read_trace", "span", "start", "stop"]
+           "metrics", "prof", "read_trace", "span", "start", "stop",
+           "xprof"]

@@ -1,0 +1,237 @@
+"""Executable observatory: a process-wide registry of jit executables.
+
+Every instrumented jit boundary (the six kernel wrappers, the population
+QAT finetune, the netlist engines) dispatches through
+:func:`dispatch(site, key, lower=...) <dispatch>`, where ``key`` is the
+exact static-shape specialization tuple the jit will compile one
+executable per. The registry records, per key:
+
+* the trigger **site** and a **signature hash** of the lowered avals;
+* first-compile **cost/memory analysis** (FLOPs, bytes accessed,
+  generated-code/argument/output/temp bytes) captured through
+  `repro.obs.xprof` on the first dispatch — read off AOT artifacts,
+  never by rewriting the computation;
+* **compile events** observed while the dispatch ran (count + seconds,
+  via the ``jax.monitoring`` backend-compile listener), which makes a
+  *recompile* — a compile firing on a key already dispatched — a
+  first-class, assertable quantity instead of a mystery slowdown;
+* a per-key **dispatch count** (the per-bucket dispatch histogram).
+
+Everything rides the ambient ``REPRO_TRACE`` switch exactly like
+`repro.obs.trace`: with tracing off, :func:`dispatch` is never even
+called (instrumented wrappers keep their early-return fast path), the
+registry is never touched and no listener sink is attached — provably
+zero overhead and zero behavior change. With tracing on, each dispatch
+additionally emits ``prof.compile`` / ``prof.executable`` trace events
+so `repro.obs.report` can rebuild the registry post-hoc from the JSONL.
+
+`search.runtime.SearchRuntime` snapshots the registry into every
+checkpoint and ``resume()`` restores it dict-equal (same contract as the
+metrics registry) — so a resumed search keeps its executable history
+even though the fresh process will rebuild the executables themselves.
+
+Note the checkpoint/bit-identity carve-out: compile counts live HERE,
+not in `repro.obs.metrics` counters — a preempted+resumed run recompiles
+every executable in the fresh process, so compile counts can never
+satisfy the counters' bit-identity invariant and must stay out of that
+registry.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable, Dict, Optional
+
+from repro.obs import trace as TR
+from repro.obs import xprof
+
+_LOCK = threading.Lock()
+
+
+class ExecutableRegistry:
+    """Keyed store of executable records + process compile totals.
+
+    Records are plain JSON-able dicts::
+
+        {"site": str, "signature": str?, "dispatches": int,
+         "compiles": int, "compile_s": float,
+         "aot_compiles": int, "aot_compile_s": float,
+         "flops": float?, "bytes_accessed": float?, <memory fields>?}
+    """
+
+    def __init__(self):
+        self.executables: Dict[str, Dict[str, Any]] = {}
+        self.compiles = 0
+        self.compile_s = 0.0
+        self.aot_compiles = 0
+        self.aot_compile_s = 0.0
+
+    # -- record surface ------------------------------------------------------
+
+    def record(self, site: str, key: str) -> Dict[str, Any]:
+        """Get-or-create the record for ``key`` (thread-safe)."""
+        rec = self.executables.get(key)
+        if rec is None:
+            with _LOCK:
+                rec = self.executables.setdefault(key, {
+                    "site": site, "dispatches": 0,
+                    "compiles": 0, "compile_s": 0.0,
+                    "aot_compiles": 0, "aot_compile_s": 0.0})
+        return rec
+
+    def on_compile(self, rec: Optional[Dict[str, Any]], seconds: float,
+                   aot: bool) -> None:
+        with _LOCK:
+            if aot:
+                self.aot_compiles += 1
+                self.aot_compile_s += seconds
+            else:
+                self.compiles += 1
+                self.compile_s += seconds
+            if rec is not None:
+                k = "aot_compiles" if aot else "compiles"
+                rec[k] += 1
+                rec[k[:-1] + "_s"] = rec.get(k[:-1] + "_s", 0.0) + seconds
+
+    def reset(self) -> None:
+        with _LOCK:
+            self.executables.clear()
+            self.compiles = 0
+            self.compile_s = 0.0
+            self.aot_compiles = 0
+            self.aot_compile_s = 0.0
+
+    # -- checkpoint surface --------------------------------------------------
+
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-able, keys sorted — byte-stable for equal states (the same
+        convention as `metrics.MetricsRegistry.snapshot`)."""
+        with _LOCK:
+            return {
+                "executables": {k: {f: x for f, x in sorted(v.items())
+                                    if not f.startswith("_")}
+                                for k, v in sorted(self.executables.items())},
+                "totals": {"aot_compile_s": self.aot_compile_s,
+                           "aot_compiles": self.aot_compiles,
+                           "compile_s": self.compile_s,
+                           "compiles": self.compiles},
+            }
+
+    def restore(self, snap: Optional[Dict[str, Any]]) -> None:
+        """Replace state with a snapshot's — exact, so a restored registry
+        is dict-equal to the one at save time. Tolerates missing sections
+        (checkpoints predating the observatory restore to empty)."""
+        self.reset()
+        if not snap:
+            return
+        with _LOCK:
+            for k, v in snap.get("executables", {}).items():
+                self.executables[k] = dict(v)
+            t = snap.get("totals", {})
+            self.compiles = int(t.get("compiles", 0))
+            self.compile_s = float(t.get("compile_s", 0.0))
+            self.aot_compiles = int(t.get("aot_compiles", 0))
+            self.aot_compile_s = float(t.get("aot_compile_s", 0.0))
+
+
+# the process-wide registry (one executable cache per process — jax's)
+REGISTRY = ExecutableRegistry()
+
+_current = threading.local()        # .stack: records of in-flight dispatches
+_sink_attached = False
+
+
+def _dispatch_stack():
+    st = getattr(_current, "stack", None)
+    if st is None:
+        st = _current.stack = []
+    return st
+
+
+def _sink(seconds: float, aot: bool) -> None:
+    """The registry's compile-listener sink: only observes while tracing
+    is on (profiling == tracing), attributes each backend compile to the
+    innermost in-flight dispatch."""
+    if not TR.active():
+        return
+    st = _dispatch_stack()
+    rec = st[-1] if st else None
+    REGISTRY.on_compile(rec, seconds, aot)
+    TR.event("prof.compile", site=rec["site"] if rec else None,
+             key=rec["_key"] if rec else None,
+             seconds=round(seconds, 6), aot=bool(aot))
+
+
+def _ensure_sink() -> None:
+    global _sink_attached
+    if not _sink_attached:
+        with _LOCK:
+            if not _sink_attached:
+                xprof.add_sink(_sink)
+                _sink_attached = True
+
+
+def profiling() -> bool:
+    """Profiling is on iff tracing is on (one ambient switch)."""
+    return TR.active()
+
+
+def key_str(key: Any) -> str:
+    return key if isinstance(key, str) else repr(key)
+
+
+@contextlib.contextmanager
+def dispatch(site: str, key: Any, *,
+             lower: Optional[Callable[[], Any]] = None, **attrs):
+    """Wrap one dispatch of a jit'd callable specialized on ``key``.
+
+    Must be called only when :func:`profiling` — instrumented wrappers
+    keep their ``if not TR.active(): return fast_path()`` head, so the
+    off path never reaches here. The body should ``block_until_ready``
+    its result so the span covers real execution.
+
+    ``lower`` is a zero-arg thunk returning the ``Lowered`` for exactly
+    this call's arguments; on the first dispatch of ``key`` its
+    cost/memory analyses are captured into the registry (the AOT compile
+    this needs on jax 0.4.x is flagged and never counted as a recompile).
+    """
+    _ensure_sink()
+    kstr = key_str(key)
+    first = TR.first_call(key)
+    rec = REGISTRY.record(site, kstr)
+    rec["_key"] = kstr              # for sink attribution; dropped below
+    st = _dispatch_stack()
+    st.append(rec)
+    try:
+        with TR.span(site, key=kstr, first=first, **attrs) as sp:
+            yield sp
+    finally:
+        st.pop()
+        rec.pop("_key", None)
+        with _LOCK:
+            rec["dispatches"] += 1
+    if "signature" not in rec and lower is not None:
+        cap = xprof.capture_executable(lower)
+        with _LOCK:
+            for k, v in cap.items():
+                rec.setdefault(k, v)
+            rec.setdefault("signature", "")
+        TR.event("prof.executable", site=site, key=kstr, **{
+            k: v for k, v in sorted(rec.items())
+            if k not in ("site", "_key")})
+
+
+def snapshot() -> Dict[str, Any]:
+    return REGISTRY.snapshot()
+
+
+def restore(snap: Optional[Dict[str, Any]]) -> None:
+    REGISTRY.restore(snap)
+
+
+def reset() -> None:
+    REGISTRY.reset()
+
+
+__all__ = ["ExecutableRegistry", "REGISTRY", "dispatch", "key_str",
+           "profiling", "reset", "restore", "snapshot"]

@@ -14,15 +14,29 @@ from the structured records `repro.obs.trace` wrote during a search:
 * **cache-hit-rate curve** — per fleet round from ``fleet.fit`` events
   (memo hits) and per evaluation batch from ``eval.batch`` (EvalCache
   hits);
+* **executables** — the executable observatory rebuilt post-hoc from
+  ``prof.executable`` / ``prof.compile`` events and the ``key`` attrs on
+  dispatch spans: per static-shape key, dispatch counts, compile
+  events/seconds (XLA recompiles are keys compiling more than once),
+  FLOPs/bytes from the captured cost analysis — with top-N cuts by
+  compile time, FLOPs and dispatch count;
+* **padding waste** — packing efficiency of the bucketed executables
+  from ``netlist_sim.padding`` / ``eval.padding`` events: real vs padded
+  lanes/rows/slots and the waste share each bucket family pays for
+  executable reuse;
+* **recompiles per generation** — backend-compile events bucketed into
+  the ``island.generation`` span intervals, making a recompile storm in
+  a warm search visible at a glance;
 * **fault/quarantine ledger** — the complete chronological stream of
   ejections, kills, migrations, quarantines, preemptions, checkpoint
   writes and cache salvages (the in-memory rings keep only a tail; the
   trace keeps everything).
 
 ``--csv PREFIX`` additionally writes ``PREFIX.spans.csv``,
-``PREFIX.generations.csv``, ``PREFIX.cache.csv`` and ``PREFIX.ledger.csv``
-for downstream tooling. Rendering is deterministic for a given trace
-file, so a committed trace has a golden report (tested).
+``PREFIX.generations.csv``, ``PREFIX.cache.csv``, ``PREFIX.ledger.csv``,
+``PREFIX.executables.csv`` and ``PREFIX.padding.csv`` for downstream
+tooling. Rendering is deterministic for a given trace file, so a
+committed trace has a golden report (tested).
 """
 from __future__ import annotations
 
@@ -167,6 +181,130 @@ def cache_curve(records: Sequence[Dict]) -> List[Dict]:
                      for i, b in enumerate(batches)]
 
 
+_EXEC_CAPTURE_FIELDS = ("signature", "flops", "bytes_accessed",
+                        "generated_code_size_in_bytes",
+                        "argument_size_in_bytes", "output_size_in_bytes",
+                        "temp_size_in_bytes")
+
+
+def executables(records: Sequence[Dict]) -> List[Dict]:
+    """Rebuild the executable registry from the trace: ``prof.executable``
+    events carry the first-compile capture, ``prof.compile`` events the
+    backend-compile accounting, and dispatch spans (any span with a
+    ``key`` attr) the per-key dispatch count and wall-clock. Compiles
+    with no in-flight dispatch aggregate under key ``(unattributed)``."""
+    ex: Dict[str, Dict] = {}
+
+    def rec(key: str, site: Optional[str] = None) -> Dict:
+        r = ex.get(key)
+        if r is None:
+            r = ex[key] = {"key": key, "site": site or "", "dispatches": 0,
+                           "total_s": 0.0, "compiles": 0, "compile_s": 0.0,
+                           "aot_compiles": 0, "aot_compile_s": 0.0}
+        if site and not r["site"]:
+            r["site"] = site
+        return r
+
+    for r in records:
+        a = _attrs(r)
+        if r.get("kind") == "span" and "key" in a:
+            e = rec(a["key"], r["name"])
+            e["dispatches"] += 1
+            e["total_s"] += float(r.get("dur", 0.0))
+        elif r.get("kind") != "event":
+            continue
+        elif r["name"] == "prof.compile":
+            e = rec(a.get("key") or "(unattributed)", a.get("site"))
+            pre = "aot_" if a.get("aot") else ""
+            e[pre + "compiles"] += 1
+            e[pre + "compile_s"] += float(a.get("seconds", 0.0))
+        elif r["name"] == "prof.executable":
+            e = rec(a["key"], a.get("site"))
+            for f in _EXEC_CAPTURE_FIELDS:
+                if f in a:
+                    e[f] = a[f]
+    rows = sorted(ex.values(),
+                  key=lambda e: (-e["compile_s"], -e["dispatches"],
+                                 e["key"]))
+    return rows
+
+
+def padding_table(records: Sequence[Dict]) -> List[Dict]:
+    """Aggregate padding-waste accounting per bucket family: the netlist
+    engines' NOP lanes / repeated candidates / repeated batch rows
+    (``netlist_sim.padding``) and the QAT evaluator's population-bucket
+    slack (``eval.padding``)."""
+    agg: Dict[Tuple[str, str], Dict] = {}
+    for r in records:
+        if r.get("kind") != "event":
+            continue
+        a = _attrs(r)
+        if r["name"] == "netlist_sim.padding":
+            k = ("netlist_sim." + str(a.get("engine")), "lanes")
+            d = agg.setdefault(k, {"launches": 0, "used": 0, "total": 0})
+            d["launches"] += 1
+            d["used"] += int(a.get("lanes_used", 0))
+            d["total"] += int(a.get("lanes_total", 0))
+            k2 = ("netlist_sim." + str(a.get("engine")), "rows")
+            d2 = agg.setdefault(k2, {"launches": 0, "used": 0, "total": 0})
+            d2["launches"] += 1
+            d2["used"] += int(a.get("rows_real", 0))
+            d2["total"] += int(a.get("rows_total", 0))
+        elif r["name"] == "eval.padding":
+            k = (f"eval.finetune[{a.get('dataset')}]", "specs")
+            d = agg.setdefault(k, {"launches": 0, "used": 0, "total": 0})
+            d["launches"] += 1
+            d["used"] += int(a.get("specs_real", 0))
+            d["total"] += int(a.get("specs_total", 0))
+    return [{"site": site, "dim": dim, **d,
+             "waste_pct": (100.0 * (1.0 - d["used"] / d["total"])
+                           if d["total"] else 0.0)}
+            for (site, dim), d in sorted(agg.items())]
+
+
+def recompile_timeline(records: Sequence[Dict]) -> List[Dict]:
+    """Dispatch-triggered backend compiles per ``island.generation``
+    interval (profiler-initiated AOT captures excluded). Compiles outside
+    every generation span (warm-up, checkpoint/resume, report glue) land
+    in the ``(outside generations)`` row."""
+    gens = []
+    for r in records:
+        if r.get("kind") == "span" and r["name"] == "island.generation":
+            a = _attrs(r)
+            ts = float(r.get("ts", 0.0))
+            gens.append({"start": ts, "end": ts + float(r.get("dur", 0.0)),
+                         "island": a.get("island"),
+                         "round": a.get("round"),
+                         "generation": a.get("generation"),
+                         "compiles": 0, "compile_s": 0.0})
+    gens.sort(key=lambda g: g["start"])
+    outside = {"island": None, "round": None, "generation": None,
+               "compiles": 0, "compile_s": 0.0}
+    any_compiles = False
+    for r in records:
+        if r.get("kind") != "event" or r["name"] != "prof.compile":
+            continue
+        a = _attrs(r)
+        if a.get("aot"):
+            continue
+        any_compiles = True
+        ts = float(r.get("ts", 0.0))
+        for g in gens:
+            if g["start"] <= ts <= g["end"]:
+                g["compiles"] += 1
+                g["compile_s"] += float(a.get("seconds", 0.0))
+                break
+        else:
+            outside["compiles"] += 1
+            outside["compile_s"] += float(a.get("seconds", 0.0))
+    if not any_compiles:
+        return []
+    rows = [{k: g[k] for k in ("island", "round", "generation", "compiles",
+                               "compile_s")} for g in gens]
+    rows.append(outside)
+    return rows
+
+
 def ledger(records: Sequence[Dict]) -> List[Dict]:
     out = []
     for r in records:
@@ -270,6 +408,65 @@ def render(records: Sequence[Dict], damaged: int = 0,
                          f"cache hits ({c['hit_rate']:.1%}), "
                          f"{c['evaluated']} evaluated")
 
+    ex = executables(records)
+    lines.append("")
+    lines.append("-- executables (observatory) --")
+    if not ex:
+        lines.append("(no profiled dispatches: run with REPRO_TRACE=1)")
+    else:
+        n_comp = sum(e["compiles"] for e in ex)
+        comp_s = sum(e["compile_s"] for e in ex)
+        n_disp = sum(e["dispatches"] for e in ex)
+        recomp = sum(1 for e in ex if e["compiles"] > 1)
+        lines.append(f"{len(ex)} executable key(s), {n_disp} dispatches, "
+                     f"{n_comp} backend compile(s) ({comp_s:.3f}s), "
+                     f"{recomp} key(s) recompiled")
+
+        def _ex_row(e):
+            flops = e.get("flops")
+            return (f"  {e['site']:<28}{e['dispatches']:>6}"
+                    f"{e['compiles']:>5}{e['compile_s']:>9.3f}"
+                    f"{e['total_s']:>9.3f}"
+                    + (f"{flops:>12.3g}" if flops is not None
+                       else f"{'-':>12}")
+                    + f"  {e['key'][:40]}")
+
+        hdr = (f"  {'site':<28}{'disp':>6}{'comp':>5}{'comp_s':>9}"
+               f"{'disp_s':>9}{'flops':>12}  key")
+        for title, keyfn in (
+                ("top by compile time", lambda e: -e["compile_s"]),
+                ("top by flops", lambda e: -(e.get("flops") or 0.0)),
+                ("top by dispatches", lambda e: -e["dispatches"])):
+            lines.append(f" {title}:")
+            lines.append(hdr)
+            for e in sorted(ex, key=keyfn)[:5]:
+                lines.append(_ex_row(e))
+
+    pad = padding_table(records)
+    lines.append("")
+    lines.append("-- padding waste (bucketed-executable overhead) --")
+    if not pad:
+        lines.append("(no netlist_sim.padding / eval.padding events)")
+    else:
+        lines.append(f"{'site':<28}{'dim':>6}{'launches':>10}{'used':>12}"
+                     f"{'total':>12}{'waste':>8}")
+        for p in pad:
+            lines.append(f"{p['site']:<28}{p['dim']:>6}{p['launches']:>10}"
+                         f"{p['used']:>12}{p['total']:>12}"
+                         f"{p['waste_pct']:>7.1f}%")
+
+    rt = recompile_timeline(records)
+    lines.append("")
+    lines.append("-- recompiles per generation --")
+    if not rt:
+        lines.append("(no prof.compile events)")
+    for row in rt:
+        where = ("(outside generations)" if row["generation"] is None else
+                 f"island {row['island']} r{row['round']} "
+                 f"g{row['generation']}")
+        lines.append(f"{where:<28}{row['compiles']:>4} compile(s) "
+                     f"{row['compile_s']:>8.3f}s")
+
     led = ledger(records)
     lines.append("")
     lines.append("-- fault/quarantine ledger --")
@@ -309,6 +506,8 @@ def write_csvs(records: Sequence[Dict], prefix: str) -> List[Path]:
     dump("generations", gens)
     dump("cache", cache_curve(records))
     dump("ledger", ledger(records))
+    dump("executables", executables(records))
+    dump("padding", padding_table(records))
     return out
 
 
@@ -319,7 +518,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("trace", help="path to the trace .jsonl")
     ap.add_argument("--csv", metavar="PREFIX", default=None,
                     help="also write PREFIX.{spans,generations,cache,"
-                         "ledger}.csv")
+                         "ledger,executables,padding}.csv")
     args = ap.parse_args(argv)
     records, damaged = read_trace(args.trace)
     print(render(records, damaged, source=args.trace))

@@ -1,0 +1,209 @@
+"""XLA-facing profiling primitives: compile listeners + artifact capture.
+
+Two independent pieces, both usable without the ambient tracer:
+
+* **compile accounting** — ``jax.monitoring`` fires
+  ``/jax/core/compile/backend_compile_duration`` on every XLA backend
+  compile (a single dispatch may fire several: main computation plus
+  constant/donation subcomputations). :func:`add_sink` /
+  :func:`count_compiles` fan those events out to in-process observers.
+  One module-level listener is installed lazily and exactly once — jax
+  only offers ``clear_event_listeners()`` (which would drop *everyone's*
+  listeners), so ours stays registered and forwards to whatever sinks
+  are currently attached; with no sinks it is one list check.
+
+* **artifact capture** — :func:`capture_executable` runs a caller-supplied
+  ``lower()`` thunk and reads ``cost_analysis()`` / ``memory_analysis()``
+  off the AOT artifacts (`jax.stages.Lowered` / `Compiled`). On jax
+  0.4.x the AOT compile cache is *not* shared with the dispatch cache,
+  so ``lowered.compile()`` performs a real backend compile even for an
+  executable the dispatch path already built; those profiler-initiated
+  compiles run inside :func:`aot_scope` and reach sinks flagged
+  ``aot=True`` so recompile accounting never blames the profiler for
+  them. Backends returning ``None`` (or raising) for either analysis are
+  tolerated — capture degrades to whatever fields exist.
+
+Nothing here mutates the computation being profiled: capture reads
+lowered artifacts, it never wraps or rewrites the jitted callable, so
+profiling cannot perturb device-side numerics.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+from jax import monitoring
+
+EVENT_COMPILE = "/jax/core/compile/backend_compile_duration"
+
+# memory_analysis() fields copied into capture dicts, in report order
+_MEMORY_FIELDS = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "temp_size_in_bytes")
+
+_lock = threading.Lock()
+_installed = False
+_sinks: List[Callable[[float, bool], None]] = []
+_aot = threading.local()            # .depth > 0 => profiler-initiated
+
+
+def _in_aot_scope() -> bool:
+    return getattr(_aot, "depth", 0) > 0
+
+
+def _on_event_duration(event: str, duration: float, **kw) -> None:
+    if event != EVENT_COMPILE or not _sinks:
+        return
+    aot = _in_aot_scope()
+    for sink in list(_sinks):
+        sink(duration, aot)
+
+
+def install_listener() -> None:
+    """Register the module's forwarding listener (idempotent)."""
+    global _installed
+    with _lock:
+        if not _installed:
+            monitoring.register_event_duration_secs_listener(
+                _on_event_duration)
+            _installed = True
+
+
+def listener_installed() -> bool:
+    return _installed
+
+
+def add_sink(sink: Callable[[float, bool], None]) -> None:
+    """Attach ``sink(seconds, aot)``; installs the listener on first use."""
+    install_listener()
+    with _lock:
+        if sink not in _sinks:
+            _sinks.append(sink)
+
+
+def remove_sink(sink: Callable[[float, bool], None]) -> None:
+    with _lock:
+        if sink in _sinks:
+            _sinks.remove(sink)
+
+
+class aot_scope:
+    """``with aot_scope():`` — backend compiles inside are profiler-initiated
+    (AOT artifact capture) and reach sinks with ``aot=True``."""
+
+    def __enter__(self):
+        _aot.depth = getattr(_aot, "depth", 0) + 1
+        return self
+
+    def __exit__(self, *exc):
+        _aot.depth -= 1
+        return False
+
+
+class CompileCount:
+    """A sink accumulating backend-compile counts and seconds, split into
+    dispatch-triggered vs profiler-initiated (AOT)."""
+    __slots__ = ("compiles", "compile_s", "aot_compiles", "aot_compile_s")
+
+    def __init__(self):
+        self.compiles = 0
+        self.compile_s = 0.0
+        self.aot_compiles = 0
+        self.aot_compile_s = 0.0
+
+    def __call__(self, seconds: float, aot: bool) -> None:
+        if aot:
+            self.aot_compiles += 1
+            self.aot_compile_s += seconds
+        else:
+            self.compiles += 1
+            self.compile_s += seconds
+
+
+class count_compiles:
+    """``with count_compiles() as c:`` — count every XLA backend compile in
+    the body (works with tracing off; benchmarks use it to assert warm
+    phases compile nothing). ``c.compiles``/``c.compile_s`` exclude
+    profiler-initiated AOT compiles, which land in ``c.aot_*``."""
+
+    def __enter__(self) -> CompileCount:
+        self._count = CompileCount()
+        add_sink(self._count)
+        return self._count
+
+    def __exit__(self, *exc):
+        remove_sink(self._count)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# AOT artifact capture
+# ---------------------------------------------------------------------------
+
+
+def signature_hash(lowered) -> str:
+    """Stable short hash of the lowered input signature (abstract avals:
+    shapes + dtypes), for cross-run executable identity."""
+    try:
+        sig = str(lowered.in_avals)
+    except Exception:
+        sig = repr(lowered)
+    return hashlib.sha1(sig.encode()).hexdigest()[:12]
+
+
+def _first_dict(obj) -> Optional[Dict[str, Any]]:
+    """cost_analysis() is a dict on Lowered, a list of per-computation
+    dicts on Compiled — normalize to the main computation's dict."""
+    if isinstance(obj, dict):
+        return obj
+    if isinstance(obj, (list, tuple)) and obj and isinstance(obj[0], dict):
+        return obj[0]
+    return None
+
+
+def capture_executable(lower: Callable[[], Any], *,
+                       compile: bool = True) -> Dict[str, Any]:
+    """Run a ``lower()`` thunk and read the artifact analyses.
+
+    -> {"signature": ..., "flops": ..., "bytes_accessed": ...,
+        <memory fields>} with only the fields the backend reported;
+    ``{"error": <ExcName>}`` if lowering itself failed. ``compile=False``
+    skips the (real, cache-missing on 0.4.x) AOT backend compile and the
+    memory fields that need it.
+    """
+    out: Dict[str, Any] = {}
+    try:
+        with aot_scope():
+            lowered = lower()
+            out["signature"] = signature_hash(lowered)
+            cost = _first_dict(lowered.cost_analysis())
+            if compile:
+                compiled = lowered.compile()
+                cost = _first_dict(compiled.cost_analysis()) or cost
+                mem = compiled.memory_analysis()
+                if mem is not None:
+                    for f in _MEMORY_FIELDS:
+                        v = getattr(mem, f, None)
+                        if v is not None:
+                            out[f] = int(v)
+            if cost:
+                if "flops" in cost:
+                    out["flops"] = float(cost["flops"])
+                if "bytes accessed" in cost:
+                    out["bytes_accessed"] = float(cost["bytes accessed"])
+    except Exception as e:                          # noqa: BLE001
+        # profiling must never take down the computation it observes
+        out.setdefault("error", type(e).__name__)
+    return out
+
+
+def backend() -> str:
+    return jax.default_backend()
+
+
+__all__ = ["EVENT_COMPILE", "CompileCount", "aot_scope", "add_sink",
+           "backend", "capture_executable", "count_compiles",
+           "install_listener", "listener_installed", "remove_sink",
+           "signature_hash"]

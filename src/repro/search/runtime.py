@@ -28,6 +28,7 @@ from repro.core.compression_spec import ModelMin
 from repro.core.pareto import pareto_front
 from repro.dist import fault_tolerance as FT
 from repro.obs import metrics as MT
+from repro.obs import prof as PF
 from repro.obs import trace as TR
 from repro.obs.ring import RingLog
 from repro.search.islands import IslandConfig, IslandFleet
@@ -197,6 +198,10 @@ class SearchRuntime:
             # the whole metrics registry rides along so resume() restores
             # monotone counters bit-identically
             "metrics": MT.snapshot(),
+            # the executable observatory too: a resumed run keeps its
+            # executable history (dispatch counts, captured cost/memory)
+            # even though the fresh process rebuilds the executables
+            "profile": PF.snapshot(),
         }
         return tree, meta
 
@@ -248,6 +253,9 @@ class SearchRuntime:
         # restored counters are bit-identical to the values at save time:
         # the continuation increments from exactly where the dead run stood
         MT.restore(meta.get("metrics"))
+        # executable registry restores dict-equal (checkpoints predating
+        # the observatory restore to empty)
+        PF.restore(meta.get("profile"))
         return rt
 
 

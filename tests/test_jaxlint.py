@@ -142,3 +142,66 @@ def test_obs_outside_jit_not_flagged(tmp_path):
            "        y = _f_jit(x)\n"
            "    return y\n")
     assert _lint_src(src, tmp_path) == []
+
+
+def test_jit_in_loop_construction_flagged(tmp_path):
+    src = ("import jax\n"
+           "def f(xs):\n"
+           "    out = []\n"
+           "    for x in xs:\n"
+           "        g = jax.jit(lambda v: v + 1)\n"   # fresh wrapper/iter
+           "        out.append(g(x))\n"
+           "    return out\n")
+    findings = _lint_src(src, tmp_path)
+    assert _rules(findings) == ["jit-in-loop"]
+    assert "inside a loop body" in findings[0].message
+
+
+def test_jit_in_loop_partial_in_while_flagged(tmp_path):
+    src = ("import functools\n"
+           "import jax\n"
+           "def f(x):\n"
+           "    while x < 3:\n"
+           "        h = functools.partial(jax.jit, static_argnames=('k',))\n"
+           "        x = x + 1\n"
+           "    return x\n")
+    assert _rules(_lint_src(src, tmp_path)) == ["jit-in-loop"]
+
+
+def test_jit_construct_and_dispatch_in_function_flagged(tmp_path):
+    # the clustering.cluster_per_input hazard class this PR fixed: an
+    # entry point that builds and invokes the jit per call never hits the
+    # wrapper's dispatch cache
+    src = ("import jax\n"
+           "def cluster(w, k):\n"
+           "    return jax.jit(_kmeans)(w, k)\n")
+    findings = _lint_src(src, tmp_path)
+    assert _rules(findings) == ["jit-in-loop"]
+    assert "retraces and recompiles" in findings[0].message
+
+
+def test_jit_hoisted_idioms_not_flagged(tmp_path):
+    # construct-once / cached constructions: module scope, decorator,
+    # lru_cache factory, attribute caching — and the repo's entry-point
+    # idiom of *dispatching* a module-level jit inside a loop
+    src = ("import functools\n"
+           "import jax\n"
+           "_g = jax.jit(lambda v: v + 1)\n"
+           "@functools.partial(jax.jit, static_argnames=('k',))\n"
+           "def _f_jit(x, *, k=2):\n"
+           "    return x * k\n"
+           "@functools.lru_cache(maxsize=None)\n"
+           "def _make(k):\n"
+           "    return jax.jit(lambda v: v * k)\n"
+           "class Sim:\n"
+           "    def __init__(self):\n"
+           "        self._step = jax.jit(self._raw)\n"
+           "    def _raw(self, x):\n"
+           "        return x\n"
+           "def run(xs):\n"
+           "    out = []\n"
+           "    for x in xs:\n"                  # dispatch in loop: fine
+           "        out.append(_f_jit(x, k=3))\n"
+           "        out.append(_g(x))\n"
+           "    return out\n")
+    assert _lint_src(src, tmp_path) == []

@@ -305,3 +305,23 @@ def test_pack_cache_reuses_tables(monkeypatch):
     b = BE._packed_netlist_for(key, net, NS)
     assert a is b and calls["n"] == 1
     assert BE._packed_netlist_for(None, net, NS) is not a  # uncached path
+
+
+def test_pack_cache_lru_cap_and_eviction_counter(monkeypatch):
+    from repro.obs import metrics as MT
+    monkeypatch.setattr(BE, "_PACK_CACHE_CAP", 3)
+    BE._PACK_CACHE.clear()
+    ev0 = MT.counter("netlist_sim.pack_evictions").value
+    net = _synth_net((5, 4, 3))
+    for k in ("a", "b", "c"):
+        BE._packed_netlist_for(k, net, NS)
+    first_a = BE._PACK_CACHE["a"]
+    BE._packed_netlist_for("a", net, NS)          # refresh a's recency
+    BE._packed_netlist_for("d", net, NS)          # evicts b (LRU), not a
+    assert set(BE._PACK_CACHE) == {"a", "c", "d"}
+    assert BE._PACK_CACHE["a"] is first_a
+    assert MT.counter("netlist_sim.pack_evictions").value == ev0 + 1
+    BE._packed_netlist_for("e", net, NS)          # evicts c
+    assert set(BE._PACK_CACHE) == {"a", "d", "e"}
+    assert MT.counter("netlist_sim.pack_evictions").value == ev0 + 2
+    BE._PACK_CACHE.clear()

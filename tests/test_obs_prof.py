@@ -1,0 +1,297 @@
+"""Executable observatory (`repro.obs.prof` / `repro.obs.xprof`): off-path
+inertness, dispatch/capture registry contracts, compile counting, profiled
+results bit-identical to unprofiled ones, registry checkpoint/resume
+dict-equality, and the report's executables/padding sections against a
+committed profiled-run golden."""
+import dataclasses
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.printed_mlp import PRINTED_MLPS
+from repro.core import batch_eval as BE
+from repro.core.compression_spec import ModelMin
+from repro.core.ga import GAConfig
+from repro.kernels.quant_matmul import quant_matmul
+from repro.obs import prof as PF
+from repro.obs import report
+from repro.obs import trace as TR
+from repro.obs import xprof
+from repro.search import (IslandConfig, PreemptedError, SearchConfig,
+                          SearchRuntime)
+from repro.search.faults import FaultHarness, FaultPlan
+
+DATA = Path(__file__).resolve().parent / "data"
+
+
+def _tracing_off():
+    """See tests/test_obs.py — CI runs with REPRO_TRACE=1; detach it."""
+    import contextlib
+
+    @contextlib.contextmanager
+    def cm():
+        prev, TR._tracer = TR._tracer, None
+        try:
+            yield
+        finally:
+            TR._tracer = prev
+    return cm()
+
+
+def _qm_args(seed=0):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(8, 16)), jnp.float32)
+    w_q = jnp.asarray(r.integers(-7, 8, size=(16, 12)), jnp.int8)
+    scales = jnp.asarray(r.uniform(0.1, 1.0, size=(12,)), jnp.float32)
+    return x, w_q, scales
+
+
+# ---------------------------------------------------------------------------
+# off path: tracing off => the registry layer is never touched
+# ---------------------------------------------------------------------------
+
+
+def test_off_path_never_touches_registry(monkeypatch):
+    """With REPRO_TRACE off, instrumented wrappers take their fast path:
+    no dispatch record, no capture_executable, no registry mutation —
+    provably zero observatory overhead."""
+    calls = []
+    real_dispatch = PF.dispatch
+    monkeypatch.setattr(PF, "dispatch",
+                        lambda *a, **k: calls.append("dispatch")
+                        or real_dispatch(*a, **k))
+    monkeypatch.setattr(xprof, "capture_executable",
+                        lambda *a, **k: calls.append("capture") or {})
+    PF.reset()
+    with _tracing_off():
+        y = quant_matmul(*_qm_args())
+    jax.block_until_ready(y)
+    assert calls == []
+    assert PF.REGISTRY.executables == {}
+    assert PF.REGISTRY.compiles == 0 and PF.REGISTRY.aot_compiles == 0
+
+
+# ---------------------------------------------------------------------------
+# on path: dispatch records, one-shot capture, trace events
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_records_and_captures_once(tmp_path):
+    PF.reset()
+    args = _qm_args()
+    with TR.capture(tmp_path / "t.jsonl") as _:
+        y1 = quant_matmul(*args)
+        y2 = quant_matmul(*args)
+    recs, damaged = TR.read_trace(tmp_path / "t.jsonl")
+    assert damaged == 0
+    assert np.array_equal(np.asarray(y1), np.asarray(y2))
+
+    assert len(PF.REGISTRY.executables) == 1
+    (key, rec), = PF.REGISTRY.executables.items()
+    assert key.startswith("('quant_matmul'")
+    assert rec["site"] == "kernels.quant_matmul"
+    assert rec["dispatches"] == 2
+    # the capture ran exactly once and landed cost/memory fields (or a
+    # flagged capture error — never a crash)
+    assert "signature" in rec
+    if "error" not in rec:
+        assert rec["flops"] >= 0
+        assert rec["output_size_in_bytes"] > 0
+    # the registry state is reconstructible from the trace stream
+    ex_events = [r for r in recs if r.get("name") == "prof.executable"]
+    assert len(ex_events) == 1 and ex_events[0]["attrs"]["key"] == key
+    spans = [r for r in recs if r.get("name") == "kernels.quant_matmul"]
+    assert len(spans) == 2
+    assert [s["attrs"]["first"] for s in spans] == [True, False]
+
+
+def test_snapshot_is_jsonable_sorted_and_drops_transients():
+    import json
+    PF.reset()
+    rec = PF.REGISTRY.record("site.b", "kb")
+    rec["_key"] = "kb"                      # in-flight transient
+    PF.REGISTRY.record("site.a", "ka")
+    PF.REGISTRY.on_compile(rec, 0.25, False)
+    PF.REGISTRY.on_compile(None, 1.5, True)  # unattributed AOT compile
+    snap = PF.snapshot()
+    assert list(snap["executables"]) == ["ka", "kb"]
+    assert "_key" not in snap["executables"]["kb"]
+    assert snap["executables"]["kb"]["compiles"] == 1
+    assert snap["totals"] == {"aot_compile_s": 1.5, "aot_compiles": 1,
+                              "compile_s": 0.25, "compiles": 1}
+    assert json.dumps(snap, sort_keys=True)  # checkpoint-serializable
+    PF.reset()
+
+
+def test_count_compiles_sees_fresh_backend_compile():
+    """`xprof.count_compiles` needs no tracing — it is the bench-side
+    recompile gate (netlist_bench's zero-compile acceptance)."""
+    with _tracing_off():
+        with xprof.count_compiles() as cc:
+            jax.block_until_ready(
+                jax.jit(lambda x: x * 3 + 1)(jnp.arange(11.0)))
+        assert cc.compiles >= 1 and cc.compile_s > 0.0
+        with xprof.count_compiles() as warm:
+            jax.block_until_ready(
+                jax.jit(lambda x: x * 3 + 1)(jnp.arange(11.0)))
+    # a fresh jit of a fresh lambda compiles again; the point is the
+    # counter observes the backend, not the python wrapper
+    assert warm.compiles >= 0
+
+
+# ---------------------------------------------------------------------------
+# profiling does not perturb results (byte-equal on/off)
+# ---------------------------------------------------------------------------
+
+
+def _kernel_cases():
+    from repro.kernels.block_sparse_matmul import block_sparse_matmul
+    from repro.kernels.clustered_matmul import clustered_matmul
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ssm_scan import ssm_scan
+    r = np.random.default_rng(7)
+    f32 = lambda *s: jnp.asarray(r.normal(size=s), jnp.float32)  # noqa: E731
+    # materialize every argument ONCE: a thunk that re-draws from the
+    # shared rng per call would feed the traced lap different inputs than
+    # the untraced one and fake a bit-equality failure
+    cm = (f32(8, 16), jnp.asarray(r.integers(0, 4, (16, 12)), jnp.int32),
+          f32(16, 4))
+    bs = (f32(8, 16), f32(16, 8), jnp.ones((2, 1), jnp.int32))
+    q, k, v = f32(1, 16, 2, 8), f32(1, 16, 2, 8), f32(1, 16, 2, 8)
+    ssm = (f32(1, 8, 4), jnp.abs(f32(1, 8, 4)) + 0.1, f32(1, 8, 2),
+           f32(1, 8, 2), -jnp.abs(f32(4, 2)), f32(4))
+    return [
+        ("kernels.quant_matmul", lambda: quant_matmul(*_qm_args(1))),
+        ("kernels.clustered_matmul", lambda: clustered_matmul(
+            *cm, block_m=8, block_n=8, block_k=8)),
+        ("kernels.block_sparse_matmul", lambda: block_sparse_matmul(
+            *bs, block_m=8, block_n=8, block_k=8)),
+        ("kernels.flash_attention", lambda: flash_attention(
+            q, k, v, causal=True, block_q=8, block_k=8)),
+        ("kernels.ssm_scan", lambda: ssm_scan(*ssm, block_t=8)),
+    ]
+
+
+@pytest.mark.parametrize("site,call", _kernel_cases(),
+                         ids=lambda c: c if isinstance(c, str) else "")
+def test_every_kernel_wrapper_profiles_and_matches(site, call, tmp_path):
+    """Each instrumented kernel wrapper: traced dispatch returns the same
+    bytes as the fast path, registers exactly one executable for the key,
+    and lands a first-dispatch capture (lower thunk args must match the
+    real call — a drifted thunk shows up here as a capture error)."""
+    with _tracing_off():
+        base = np.asarray(call())
+    PF.reset()
+    with TR.capture(tmp_path / "t.jsonl"):
+        traced = np.asarray(call())
+    assert np.array_equal(base, traced)
+    recs = [r for r in PF.REGISTRY.executables.values()
+            if r["site"] == site]
+    assert len(recs) == 1 and recs[0]["dispatches"] == 1
+    assert "signature" in recs[0] and "error" not in recs[0]
+
+
+def test_profiled_population_eval_bit_identical(tmp_path):
+    """The acceptance contract: running the full packed evaluation stack
+    (QAT finetune + netlist-exact scoring) with profiling on returns
+    byte-identical results to the unprofiled run."""
+    cfg = PRINTED_MLPS["seeds"]
+    n_layers = len(cfg.layer_dims) - 1
+    specs = [ModelMin.uniform(n_layers, bits=b, sparsity=s,
+                              input_bits=cfg.input_bits)
+             for b, s in ((4, 0.0), (3, 0.2), (5, 0.4))]
+    with _tracing_off():
+        base = BE.evaluate_population(cfg, specs, epochs=2, netlist=True)
+    PF.reset()
+    with TR.capture(tmp_path / "t.jsonl"):
+        prof = BE.evaluate_population(cfg, specs, epochs=2, netlist=True)
+    assert [dataclasses.asdict(r) for r in base] == \
+        [dataclasses.asdict(r) for r in prof]
+    # and the run actually exercised the observatory
+    sites = {r["site"] for r in PF.REGISTRY.executables.values()}
+    assert "eval.finetune" in sites
+    assert any(s.startswith("kernels.netlist_sim") for s in sites)
+
+
+# ---------------------------------------------------------------------------
+# registry rides checkpoints: resume restores dict-equal
+# ---------------------------------------------------------------------------
+
+
+def _synthetic(spec):
+    bits = sum(l.bits for l in spec.layers)
+    return (bits / 16.0, sum(l.sparsity for l in spec.layers))
+
+
+def _cfg():
+    return SearchConfig(
+        n_layers=2, rounds=4,
+        ga=GAConfig(population=6, seed=3),
+        islands=IslandConfig(n_islands=2, migration_every=2, migrants=1))
+
+
+def test_checkpoint_resume_registry_dict_equal(tmp_path):
+    PF.reset()
+    rec = PF.REGISTRY.record("kernels.netlist_sim.levels", "('k', 1, 2)")
+    rec["dispatches"] = 7
+    rec["flops"] = 1234.0
+    PF.REGISTRY.on_compile(rec, 0.125, False)
+    saved = PF.snapshot()
+
+    rt = SearchRuntime(_cfg(), evaluate=_synthetic, ckpt_root=tmp_path,
+                       harness=FaultHarness(FaultPlan(preempt_at=1)))
+    with pytest.raises(PreemptedError):
+        rt.run()
+    PF.reset()                               # simulate the fresh process
+    assert PF.snapshot()["executables"] == {}
+    SearchRuntime.resume(_cfg(), tmp_path, evaluate=_synthetic)
+    assert PF.snapshot() == saved
+    # pre-observatory checkpoints restore to empty, not a crash
+    PF.restore(None)
+    assert PF.snapshot()["executables"] == {}
+
+
+# ---------------------------------------------------------------------------
+# report: executables / padding / recompile sections
+# ---------------------------------------------------------------------------
+
+
+def _profiled_records():
+    recs, damaged = TR.read_trace(DATA / "obs_trace_profiled.jsonl")
+    assert damaged == 0
+    return recs
+
+
+def test_report_profiled_golden():
+    """A recorded profiled run (2-island GA over the real packed netlist
+    evaluator, REPRO_TRACE on) renders byte-identically to its golden —
+    executables table, padding-waste table, recompile timeline and all."""
+    txt = report.render(_profiled_records(), 0, "obs_trace_profiled.jsonl")
+    golden = (DATA / "obs_report_profiled.txt").read_text()
+    assert txt == golden
+
+
+def test_report_profiled_sections_populated(tmp_path):
+    recs = _profiled_records()
+    ex = report.executables(recs)
+    assert ex, "profiled fixture must contain executables"
+    sites = {e["site"] for e in ex}
+    assert "eval.finetune" in sites
+    assert any(s.startswith("kernels.netlist_sim") for s in sites)
+    for e in ex:
+        assert e["dispatches"] >= 1 or e["compiles"] >= 1
+    pad = report.padding_table(recs)
+    assert pad and all(0.0 <= p["waste_pct"] <= 100.0 for p in pad)
+    # the fixture's run compiled something: the timeline is non-empty and
+    # every bucket count is non-negative
+    tl = report.recompile_timeline(recs)
+    assert tl and all(t["compiles"] >= 0 for t in tl)
+    # CSV surface includes the two new files
+    prefix = tmp_path / "run"
+    report.write_csvs(recs, prefix)
+    for section in ("executables", "padding"):
+        f = Path(f"{prefix}.{section}.csv")
+        assert f.exists() and len(f.read_text().splitlines()) > 1

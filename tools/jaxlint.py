@@ -28,6 +28,19 @@ OBSERVABILITY BOUNDARY (``obs-in-jit``) — `repro.obs` spans/events/metrics
   Telemetry must wrap the *dispatch* of a jit'd function, never live
   inside it.
 
+RECOMPILE HAZARDS (``jit-in-loop``) — ``jax.jit(...)`` constructed inside
+  a loop body builds a fresh jit wrapper (and, on dispatch, a fresh
+  trace+compile) every iteration; ``jax.jit(f)(x)`` constructed and
+  invoked in one expression inside a function does the same on every
+  call. Both defeat jax's dispatch cache — the executable observatory
+  (`repro.obs.prof`) can only *report* the resulting recompile storm
+  after the fact; this rule rejects the pattern statically. Hoist the
+  construction to module scope, an attribute, or a cached factory.
+  (A jit constructed once per call but dispatched many times in a loop —
+  the entry-point idiom — is NOT flagged: whether the enclosing function
+  is itself hot is not statically decidable; that case is exactly what
+  the observatory's recompile accounting exists for.)
+
 Usage::
 
     python tools/jaxlint.py src/          # exit 1 on findings
@@ -81,6 +94,16 @@ def _dotted(node: ast.AST) -> str:
 
 def _is_jit_ref(node: ast.AST) -> bool:
     return _dotted(node) in ("jax.jit", "jit")
+
+
+def _is_jit_construction(node: ast.AST) -> bool:
+    """``jax.jit(...)`` or ``functools.partial(jax.jit, ...)`` call."""
+    if not isinstance(node, ast.Call):
+        return False
+    if _is_jit_ref(node.func):
+        return True
+    return (_dotted(node.func) in ("functools.partial", "partial")
+            and bool(node.args) and _is_jit_ref(node.args[0]))
 
 
 def _static_argnames(call: ast.Call) -> Optional[Set[str]]:
@@ -179,7 +202,8 @@ def _obs_aliases(tree: ast.Module) -> tuple:
                     bound = al.asname or al.name
                     # submodule import (trace/metrics/...) vs function import
                     if mod == "repro.obs" and al.name in (
-                            "trace", "metrics", "ring", "report"):
+                            "trace", "metrics", "ring", "report",
+                            "prof", "xprof"):
                         mods.add(bound)
                     else:
                         funcs.add(bound)
@@ -268,6 +292,44 @@ def _check_jit_body(path: str, fn: ast.FunctionDef, static: Set[str],
     return out
 
 
+def _check_jit_in_loop(path: str, tree: ast.Module) -> List[Finding]:
+    """Flag per-iteration / per-call jit construction (see module doc)."""
+    out: List[Finding] = []
+    seen: Set[int] = set()
+
+    # (a) construction lexically inside a For/While body: a fresh wrapper
+    # (and compile, on dispatch) every iteration
+    for loop in ast.walk(tree):
+        if not isinstance(loop, (ast.For, ast.AsyncFor, ast.While)):
+            continue
+        for node in ast.walk(loop):
+            if _is_jit_construction(node) and node.lineno not in seen:
+                seen.add(node.lineno)
+                out.append(Finding(
+                    path, node.lineno, "jit-in-loop",
+                    "jax.jit constructed inside a loop body — every "
+                    "iteration builds (and on dispatch compiles) a fresh "
+                    "executable; hoist the construction out of the loop"))
+
+    # (b) construct-and-dispatch in one expression inside a function:
+    # ``jax.jit(f)(x)`` can never hit the wrapper's dispatch cache
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call)
+                    and _is_jit_construction(node.func)
+                    and node.lineno not in seen):
+                seen.add(node.lineno)
+                out.append(Finding(
+                    path, node.lineno, "jit-in-loop",
+                    f"jax.jit constructed and invoked in one expression "
+                    f"inside {fn.name}() — every call retraces and "
+                    "recompiles; bind the jitted callable once (module "
+                    "scope, attribute, or cached factory)"))
+    return out
+
+
 def lint_file(path: Path, *, rel: Optional[str] = None) -> List[Finding]:
     """Lint one file. ``rel`` (posix, e.g. 'repro/circuit/ir.py') decides
     int-domain membership; defaults to the path itself."""
@@ -281,6 +343,7 @@ def lint_file(path: Path, *, rel: Optional[str] = None) -> List[Finding]:
     rel = rel if rel is not None else path.as_posix()
     if any(rel.endswith(m) for m in INT_DOMAIN_MODULES):
         out.extend(_check_int_domain(str(path), tree))
+    out.extend(_check_jit_in_loop(str(path), tree))
 
     np_aliases = _numpy_aliases(tree)
     obs_aliases = _obs_aliases(tree)
